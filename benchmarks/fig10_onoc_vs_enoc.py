@@ -1,0 +1,60 @@
+"""Paper Fig. 10: ONoC vs ENoC on NN2, Fixed Mapping, fixed core counts
+{40, 65, 90, 150, 250, 350}, batch sizes {64, 128} — training time and
+energy, plus the paper's headline averages (time reduction / energy
+saving)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.nn_benchmarks import ENOC_CORE_SWEEP, NN_BENCHMARKS
+from repro.core import (
+    ENoCBackend,
+    FCNNWorkload,
+    ONoCConfig,
+    enoc_energy,
+    fnp_cores,
+    map_cores,
+    onoc_energy,
+    simulate_epoch,
+)
+from repro.core.analyses import analyze_mapping
+
+
+def run() -> list[dict]:
+    rows = []
+    summary = {}
+    for bs in (64, 128):
+        t_red, e_red = [], []
+        for fixed in ENOC_CORE_SWEEP:
+            w = FCNNWorkload(NN_BENCHMARKS["NN2"], batch_size=bs)
+            cfg = ONoCConfig(lambda_max=64)
+            cores = fnp_cores(w, cfg, fixed)
+            mp = map_cores(w, cfg, "fm", cores)
+            rep = analyze_mapping(w, mp)
+            tr_o = simulate_epoch(w, cfg, mapping=mp)
+            tr_e = simulate_epoch(w, cfg, mapping=mp, backend=ENoCBackend())
+            e_o = onoc_energy(tr_o, mp, rep.state_transitions)
+            e_e = enoc_energy(tr_e, mp, rep.state_transitions)
+            t_red.append((tr_e.total_s - tr_o.total_s) / tr_e.total_s)
+            e_red.append((e_e.total_j - e_o.total_j) / e_e.total_j)
+            rows.append({
+                "batch": bs, "cores": fixed,
+                "onoc_time_ms": 1e3 * tr_o.total_s,
+                "enoc_time_ms": 1e3 * tr_e.total_s,
+                "onoc_energy_mj": 1e3 * e_o.total_j,
+                "enoc_energy_mj": 1e3 * e_e.total_j,
+            })
+        summary[bs] = {
+            "avg_time_reduction_pct": 100 * float(np.mean(t_red)),
+            "avg_energy_saving_pct": 100 * float(np.mean(e_red)),
+        }
+    rows.append({"summary": summary,
+                 "paper_claims": {"time": {64: 21.02, 128: 12.95},
+                                  "energy": {64: 47.85, 128: 39.27}}})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,50 @@
+"""Paper Fig. 7: per-layer time vs core count — compute, communication and
+total for layer 3 of NN2 (batch 32, 64 wavelengths), FP, BP and combined.
+Emits the curve samples and the three argmin points."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.nn_benchmarks import NN_BENCHMARKS
+from repro.core.onoc_model import (
+    FCNNWorkload,
+    ONoCConfig,
+    comm_time,
+    compute_time,
+)
+
+
+def run(layer: int = 3, batch: int = 32, lam: int = 64,
+        sample_every: int = 64) -> list[dict]:
+    w = FCNNWorkload(NN_BENCHMARKS["NN2"], batch_size=batch)
+    cfg = ONoCConfig(lambda_max=lam)
+    l = w.l
+    i_fp, i_bp = layer, 2 * l - layer + 1
+    cap = min(cfg.m, w.n(layer))
+
+    def t(i, m):
+        return compute_time(w, cfg, i, m) + comm_time(w, cfg, i, m)
+
+    ms = np.arange(1, cap + 1)
+    fp = np.array([t(i_fp, m) for m in ms])
+    bp = np.array([t(i_bp, m) for m in ms])
+    both = fp + bp
+    rows = []
+    for m in range(sample_every, cap + 1, sample_every):
+        rows.append({"cores": int(m),
+                     "fp_us": 1e6 * float(fp[m - 1]),
+                     "bp_us": 1e6 * float(bp[m - 1]),
+                     "total_us": 1e6 * float(both[m - 1])})
+    rows.append({
+        "optimum_fp": int(ms[np.argmin(fp)]),
+        "optimum_bp": int(ms[np.argmin(bp)]),
+        "optimum_combined": int(ms[np.argmin(both)]),
+        "paper_example": {"fp": 896, "bp": 704, "combined": 769},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

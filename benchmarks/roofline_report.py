@@ -1,0 +1,57 @@
+"""Roofline table generator: reads results/dryrun.json (written by
+repro.launch.dryrun) and renders the EXPERIMENTS.md §Roofline table —
+per (arch × shape × mesh): the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio and per-device HBM residency."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(path: str = "results/dryrun.json") -> list[dict]:
+    if not os.path.exists(path):
+        return [{"error": f"{path} not found; run repro.launch.dryrun first"}]
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    for key in sorted(data):
+        r = data[key]
+        if r.get("skipped"):
+            rows.append({"cell": key, "status": "skipped",
+                         "reason": r["reason"][:60]})
+            continue
+        if not r.get("ok"):
+            rows.append({"cell": key, "status": "FAIL",
+                         "error": r.get("error", "?")[:80]})
+            continue
+        rows.append({
+            "cell": key,
+            "compute_ms": round(1e3 * r["compute_s"], 2),
+            "memory_ms": round(1e3 * r["memory_s"], 2),
+            "collective_ms": round(1e3 * r["collective_s"], 2),
+            "bottleneck": r["bottleneck"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "hbm_gb_per_dev": round(r["peak_memory_per_device"] / 1e9, 2),
+        })
+    return rows
+
+
+def markdown_table(path: str = "results/dryrun.json") -> str:
+    rows = run(path)
+    out = ["| cell | compute ms | memory ms | collective ms | bottleneck | "
+           "useful-FLOPs | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "status" in r:
+            out.append(f"| {r['cell']} | — | — | — | {r['status']} | — | — |")
+        else:
+            out.append(
+                f"| {r['cell']} | {r['compute_ms']} | {r['memory_ms']} | "
+                f"{r['collective_ms']} | {r['bottleneck']} | "
+                f"{r['useful_flops_ratio']} | {r['hbm_gb_per_dev']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,116 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints one CSV block per benchmark: ``benchmark,wall_us,key=value,...``
+(one line per result row), then a summary of reproduction checks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import (  # noqa: E402
+    fig7_percore_sweep,
+    fig10_onoc_vs_enoc,
+    strategy_analysis,
+    table7_prediction,
+    table8_9_baselines,
+    table10_optimal_cores,
+    roofline_report,
+)
+
+BENCHMARKS = {
+    "table7_prediction": table7_prediction.run,
+    "table8_9_baselines": table8_9_baselines.run,
+    "table10_optimal_cores": table10_optimal_cores.run,
+    "fig7_percore_sweep": fig7_percore_sweep.run,
+    "fig10_onoc_vs_enoc": fig10_onoc_vs_enoc.run,
+    "strategy_analysis": strategy_analysis.run,
+    "roofline_report": roofline_report.run,
+}
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v).replace(",", ";")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    checks: list[str] = []
+    for name, fn in BENCHMARKS.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        rows = fn()
+        us = 1e6 * (time.time() - t0)
+        for row in rows:
+            fields = ",".join(f"{k}={_fmt(v)}" for k, v in row.items())
+            print(f"{name},{us:.0f},{fields}")
+        checks.extend(_reproduction_checks(name, rows))
+
+    print("\n# reproduction checks")
+    for c in checks:
+        print(c)
+
+
+def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
+    out = []
+    if name == "table7_prediction":
+        refined = [r for r in rows if r["variant"] == "refined"]
+        worst = max(r["ape_plateau_pct"] for r in refined)
+        ok = worst <= 2.3
+        out.append(f"check,table7,plateau-APE<=2.3% (paper claim): "
+                   f"worst={worst:.2f}% -> {'PASS' if ok else 'FAIL'}")
+        worst_apd = max(r["apd_pct"] for r in refined)
+        out.append(f"check,table7,APD<=5%: worst={worst_apd:.2f}% -> "
+                   f"{'PASS' if worst_apd <= 5 else 'FAIL'}")
+    if name == "table8_9_baselines":
+        import numpy as np
+        fnp = float(np.mean([r["time_improvement_vs_fnp_pct"] for r in rows]))
+        fgp = float(np.mean([r["time_improvement_vs_fgp_pct"] for r in rows]))
+        out.append(f"check,table8,avg time improvement vs FNP: {fnp:.2f}% "
+                   f"(paper: 22.28%)")
+        out.append(f"check,table8,avg time improvement vs FGP: {fgp:.2f}% "
+                   f"(paper: 4.91%)")
+        ok = fnp > 0 and fgp >= 0
+        out.append(f"check,table8,optimal dominates both baselines -> "
+                   f"{'PASS' if ok else 'FAIL'}")
+    if name == "fig10_onoc_vs_enoc":
+        s = rows[-1]["summary"]
+        out.append(f"check,fig10,time reduction bs64={s[64]['avg_time_reduction_pct']:.1f}% "
+                   f"(paper 21.02%) bs128={s[128]['avg_time_reduction_pct']:.1f}% (paper 12.95%)")
+        out.append(f"check,fig10,energy saving bs64={s[64]['avg_energy_saving_pct']:.1f}% "
+                   f"(paper 47.85%) bs128={s[128]['avg_energy_saving_pct']:.1f}% (paper 39.27%)")
+        ok = all(s[b]["avg_time_reduction_pct"] > 0 for b in (64, 128))
+        out.append(f"check,fig10,ONoC beats ENoC at both batch sizes -> "
+                   f"{'PASS' if ok else 'FAIL'}")
+    if name == "strategy_analysis":
+        by = {(r["wavelengths"], r["strategy"]): r for r in rows}
+        ok = all(
+            by[(lam, "fm")]["state_transitions"]
+            <= by[(lam, "orrm")]["state_transitions"]
+            <= by[(lam, "rrm")]["state_transitions"]
+            for lam in (8, 64))
+        out.append(f"check,table1,transition ranking FM<=ORRM<=RRM -> "
+                   f"{'PASS' if ok else 'FAIL'}")
+        ok = all(
+            by[(lam, "fm")]["hotspot_consecutive_periods"]
+            >= by[(lam, "orrm")]["hotspot_consecutive_periods"]
+            for lam in (8, 64))
+        out.append(f"check,thm2,FM hotspot >= ORRM hotspot -> "
+                   f"{'PASS' if ok else 'FAIL'}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

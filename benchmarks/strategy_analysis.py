@@ -1,0 +1,41 @@
+"""Paper Tables 1-3 + Theorem 2: per-strategy hotspot level, state
+transitions, max routing path / worst-case insertion loss (Eq. 19), and
+max per-core memory (Eq. 20), on NN2 with the optimal allocation."""
+
+from __future__ import annotations
+
+from repro.configs.nn_benchmarks import NN_BENCHMARKS
+from repro.core import (
+    FCNNWorkload,
+    MappingStrategy,
+    ONoCConfig,
+    map_cores,
+    optimal_cores,
+)
+from repro.core.analyses import analyze_mapping
+
+
+def run() -> list[dict]:
+    rows = []
+    for lam in (8, 64):
+        w = FCNNWorkload(NN_BENCHMARKS["NN2"], batch_size=8)
+        cfg = ONoCConfig(lambda_max=lam)
+        cores = optimal_cores(w, cfg)
+        for strat in MappingStrategy:
+            mp = map_cores(w, cfg, strat, cores)
+            rep = analyze_mapping(w, mp)
+            rows.append({
+                "wavelengths": lam,
+                "strategy": strat.value,
+                "hotspot_consecutive_periods": rep.hotspot_consecutive_periods,
+                "state_transitions": rep.state_transitions,
+                "max_path_hops": rep.max_path_length_hops,
+                "worst_insertion_loss_db": round(rep.worst_insertion_loss_db, 2),
+                "max_core_memory_mb": round(rep.max_memory_bytes / 1e6, 2),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,28 @@
+"""Paper Table 10: the optimal number of cores per layer for every NN
+benchmark under (batch, wavelengths) in {1, 8} x {8, 64}."""
+
+from __future__ import annotations
+
+from repro.configs.nn_benchmarks import NN_BENCHMARKS
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig, optimal_cores
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, sizes in NN_BENCHMARKS.items():
+        for bs in (1, 8):
+            for lam in (8, 64):
+                w = FCNNWorkload(sizes, batch_size=bs)
+                cfg = ONoCConfig(lambda_max=lam)
+                rows.append({
+                    "nn": name, "batch": bs, "wavelengths": lam,
+                    "optimal_cores": optimal_cores(w, cfg),
+                    "refined_cores": optimal_cores(w, cfg,
+                                                   refine_plateau=True),
+                })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

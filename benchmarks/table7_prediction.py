@@ -1,0 +1,45 @@
+"""Paper Table 7: prediction accuracy of the optimal core count.
+
+For every NN benchmark, compare Lemma 1's m_i* against the brute-force
+simulated optimum over 1..1000 cores, averaged over batch sizes {1,8,32,64}
+and wavelengths {8,64}.  Reports the published-formula APE, the
+plateau-aware APE (argmin-stable metric, see onoc_model.prediction_error)
+and the APD, for both the raw Lemma-1 prediction and the closed-form
+plateau refinement (beyond-paper).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.nn_benchmarks import NN_BENCHMARKS, WAVELENGTHS
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig, prediction_error
+
+BATCHES = (1, 8, 32, 64)
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, sizes in NN_BENCHMARKS.items():
+        for refined in (False, True):
+            vals = []
+            for bs in BATCHES:
+                for lam in WAVELENGTHS:
+                    w = FCNNWorkload(sizes, batch_size=bs)
+                    cfg = ONoCConfig(lambda_max=lam)
+                    vals.append(prediction_error(w, cfg,
+                                                 refine_plateau=refined))
+            raw, plateau, apd = np.mean(vals, axis=0)
+            rows.append({
+                "nn": name,
+                "variant": "refined" if refined else "paper-faithful",
+                "ape_raw_pct": 100 * raw,
+                "ape_plateau_pct": 100 * plateau,
+                "apd_pct": 100 * apd,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

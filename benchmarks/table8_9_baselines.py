@@ -1,0 +1,63 @@
+"""Paper Tables 8 & 9 (+ Fig. 8/9): the optimal solution vs FNP (fixed 200
+cores) and FGP (one neuron per core) — training-time improvement and energy
+difference per NN benchmark × batch size, averaged over wavelengths 8/64.
+Fixed Mapping strategy throughout (paper §5.3)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.nn_benchmarks import NN_BENCHMARKS, WAVELENGTHS
+from repro.core import (
+    FCNNWorkload,
+    ONoCConfig,
+    fgp_cores,
+    fnp_cores,
+    map_cores,
+    onoc_energy,
+    optimal_cores,
+    simulate_epoch,
+)
+from repro.core.analyses import analyze_mapping
+
+BATCHES = (1, 8, 64, 128)
+
+
+def _time_energy(w, cfg, cores):
+    mp = map_cores(w, cfg, "fm", cores)
+    tr = simulate_epoch(w, cfg, mapping=mp)
+    rep = analyze_mapping(w, mp)
+    e = onoc_energy(tr, mp, rep.state_transitions)
+    return tr.total_s, e.total_j
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, sizes in NN_BENCHMARKS.items():
+        for bs in BATCHES:
+            t_imp = {"fnp": [], "fgp": []}
+            e_diff = {"fnp": [], "fgp": []}
+            for lam in WAVELENGTHS:
+                w = FCNNWorkload(sizes, batch_size=bs)
+                cfg = ONoCConfig(lambda_max=lam)
+                t_opt, e_opt = _time_energy(
+                    w, cfg, optimal_cores(w, cfg, refine_plateau=True))
+                t_fnp, e_fnp = _time_energy(w, cfg, fnp_cores(w, cfg))
+                t_fgp, e_fgp = _time_energy(w, cfg, fgp_cores(w, cfg))
+                t_imp["fnp"].append((t_fnp - t_opt) / t_fnp)
+                t_imp["fgp"].append((t_fgp - t_opt) / t_fgp)
+                e_diff["fnp"].append((e_fnp - e_opt) / e_fnp)
+                e_diff["fgp"].append((e_fgp - e_opt) / e_fgp)
+            rows.append({
+                "nn": name, "batch": bs,
+                "time_improvement_vs_fnp_pct": 100 * float(np.mean(t_imp["fnp"])),
+                "time_improvement_vs_fgp_pct": 100 * float(np.mean(t_imp["fgp"])),
+                "energy_saving_vs_fnp_pct": 100 * float(np.mean(e_diff["fnp"])),
+                "energy_saving_vs_fgp_pct": 100 * float(np.mean(e_diff["fgp"])),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

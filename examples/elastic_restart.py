@@ -1,0 +1,72 @@
+"""Fault-tolerance scenario: train, crash, restart from checkpoint, then
+shrink the cluster and let the ONoC planner re-derive the allocation.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig
+from repro.data import Batcher, fcnn_classification_dataset
+from repro.models import fcnn
+from repro.optim import adam
+from repro.runtime import TrainingSupervisor
+from repro.runtime.elastic import ElasticPlanner
+
+
+def main() -> None:
+    tmp = tempfile.mkdtemp(prefix="repro_elastic_")
+    sizes = [64, 128, 64, 10]
+    key = jax.random.PRNGKey(0)
+    opt = adam(3e-3)
+
+    params = fcnn.init(key, sizes)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+
+    x, y = fcnn_classification_dataset(1024, input_dim=64, seed=1)
+    batches = Batcher({"x": x, "y": y}, batch_size=32)
+
+    fail_at = {"n": 0}
+
+    @jax.jit
+    def _step(state, batch):
+        loss, grads = jax.value_and_grad(fcnn.loss_fn)(state["params"], batch)
+        p, o = opt.update(grads, state["opt"], state["params"], state["step"])
+        return {"params": p, "opt": o, "step": state["step"] + 1}, loss
+
+    def step_fn(state, batch):
+        fail_at["n"] += 1
+        if fail_at["n"] == 60:                      # injected crash
+            raise RuntimeError("simulated node failure")
+        state, loss = _step(state, batch)
+        return state, {"loss": float(loss)}
+
+    sup = TrainingSupervisor(Checkpointer(tmp), checkpoint_every=20,
+                             max_retries=0, backoff_s=0.0)
+    state, history = sup.run(state, step_fn, batches, 100)
+    print(f"completed {len(history)} steps with 1 injected failure; "
+          f"loss {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+    assert history[-1]["loss"] < history[0]["loss"]
+
+    # elastic shrink: the paper's model is the re-planning oracle
+    planner = ElasticPlanner(FCNNWorkload(sizes, batch_size=32),
+                             ONoCConfig(m=1000, lambda_max=64))
+    for m in (1000, 500, 100):
+        _, cores, mapping = planner.plan_for(m)
+        print(f"cluster size {m:4d}: allocation {cores} "
+              f"({mapping.strategy.value} placement, "
+              f"{len(mapping.active_cores())} active)")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""The ONoC allocator carried onto TPU meshes — the paper's technique as a
+first-class distribution feature (DESIGN.md §4).
+
+``plan_fcnn`` is the faithful path: per-period Lemma-1 core counts snapped
+to mesh-feasible sharding degrees, with the chosen mapping strategy
+determining the device ring order.
+
+``plan_transformer`` extends the same cost model to a transformer block's
+GEMM "periods" (qkv/o/gate/up/down — and expert FFNs with an all-to-all
+comm term for MoE): for each candidate TP degree it evaluates
+  compute ≈ FLOPs / (d · peak)        (the paper's f, Eq. 5)
+  comm    ≈ ag_bytes(d)/link + rs_bytes(d)/link     (g, Eq. 6 with the
+            all-gather ring-step model replacing WDM slot counting)
+and picks the argmin — i.e. Lemma 1 evaluated on the discrete feasible set
+{1, model, model·data, ...} instead of [1, φm] (the mesh can only shard at
+factorable degrees; DESIGN.md §2 records this assumption change).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig, optimal_cores
+from repro.core.allocation import MappingStrategy, map_cores, Mapping
+
+__all__ = ["TPUTarget", "PeriodPlan", "FCNNPlan", "plan_fcnn",
+           "feasible_degrees", "plan_gemm_period"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUTarget:
+    """v5e-class hardware constants (per chip)."""
+
+    peak_flops: float = 197e12        # bf16
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw: float = 50e9              # bytes/s per link
+    hbm_bytes: float = 16e9
+    vmem_bytes: float = 128e6
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodPlan:
+    period: int
+    onoc_cores: int          # Lemma-1 m_i* (the paper's answer)
+    degree: int              # mesh-feasible sharding degree (the TPU answer)
+    axes: tuple[str, ...]    # mesh axes realizing the degree
+    compute_s: float
+    comm_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FCNNPlan:
+    periods: tuple[PeriodPlan, ...]
+    mapping: Mapping
+    strategy: str
+
+    @property
+    def degrees(self) -> list[int]:
+        return [p.degree for p in self.periods]
+
+
+def feasible_degrees(mesh_axes: dict[str, int]) -> dict[int, tuple[str, ...]]:
+    """All sharding degrees expressible as products of mesh axes.
+
+    Axis order preference: "model" first (highest-bandwidth contiguous
+    ring), then "data", then "pod"."""
+    order = [a for a in ("model", "data", "pod") if a in mesh_axes]
+    out: dict[int, tuple[str, ...]] = {1: ()}
+    # products of prefixes and single axes
+    for i in range(len(order)):
+        prod, axes = 1, []
+        for a in order[i:]:
+            prod *= mesh_axes[a]
+            axes.append(a)
+            if prod not in out:
+                out[prod] = tuple(axes)
+    for a in order:  # single axes too
+        out.setdefault(mesh_axes[a], (a,))
+    return out
+
+
+def _snap_degree(target: int, feas: dict[int, tuple[str, ...]]) -> int:
+    """Nearest feasible degree in log space (ratio-symmetric)."""
+    return min(feas, key=lambda d: abs(math.log(max(d, 1) / max(target, 1))))
+
+
+def plan_fcnn(
+    workload: FCNNWorkload,
+    onoc_cfg: ONoCConfig,
+    mesh_axes: dict[str, int],
+    strategy: MappingStrategy | str = MappingStrategy.ORRM,
+    refine_plateau: bool = True,
+) -> FCNNPlan:
+    """Paper-faithful plan: Lemma-1 core counts snapped to the mesh."""
+    from repro.core.onoc_model import compute_time, comm_time
+
+    stars = optimal_cores(workload, onoc_cfg, refine_plateau=refine_plateau)
+    feas = feasible_degrees(mesh_axes)
+    n_dev = 1
+    for v in mesh_axes.values():
+        n_dev *= v
+
+    periods = []
+    snapped = []
+    for i, m_star in enumerate(stars, start=1):
+        n_i = workload.n(i)
+        cap = min(n_i, n_dev)
+        # the paper's even-mapping constraint (Eq. 4 ceil becomes exact):
+        # only degrees that divide n_i are eligible
+        eligible = {d: ax for d, ax in feas.items()
+                    if d <= cap and n_i % d == 0}
+        if not eligible:
+            eligible = {1: ()}
+        deg = min(eligible,
+                  key=lambda d: abs(math.log(d / max(min(m_star, cap), 1))))
+        snapped.append(deg)
+        periods.append(PeriodPlan(
+            period=i, onoc_cores=m_star, degree=deg, axes=feas.get(deg, ()),
+            compute_s=compute_time(workload, onoc_cfg, i, m_star),
+            comm_s=comm_time(workload, onoc_cfg, i, m_star),
+        ))
+    mapping = map_cores(workload, onoc_cfg, strategy, stars)
+    return FCNNPlan(periods=tuple(periods), mapping=mapping,
+                    strategy=MappingStrategy(strategy).value)
+
+
+# --------------------------------------------------------------------------
+# transformer periods (beyond-paper extension of the same trade-off)
+# --------------------------------------------------------------------------
+
+def plan_gemm_period(
+    flops: float,
+    act_bytes_in: float,
+    act_bytes_out: float,
+    mesh_axes: dict[str, int],
+    tpu: TPUTarget = TPUTarget(),
+    all_to_all_bytes: float = 0.0,
+) -> tuple[int, tuple[str, ...], dict[int, float]]:
+    """Pick the TP degree for one GEMM 'period'.
+
+    Sharding a GEMM's output dim at degree d:
+      compute ≈ flops / (d · peak)
+      comm    ≈ all-gather of the output into the next period's cores:
+                act_bytes_out · (d-1)/d / ici  (+ the BP reduce-scatter,
+                same volume — the paper's B_i + B_{2l-i+1} pairing)
+      a2a     ≈ all_to_all_bytes/d / ici (MoE dispatch, if any)
+    Returns (degree, axes, per-degree cost table)."""
+    feas = feasible_degrees(mesh_axes)
+    costs: dict[int, float] = {}
+    for d, axes in feas.items():
+        compute = flops / (d * tpu.peak_flops)
+        ag = act_bytes_out * (d - 1) / max(d, 1) / tpu.ici_bw
+        rs = act_bytes_in * (d - 1) / max(d, 1) / tpu.ici_bw
+        a2a = all_to_all_bytes / max(d, 1) / tpu.ici_bw
+        costs[d] = compute + ag + rs + a2a
+    best = min(costs, key=costs.get)
+    return best, feas[best], costs

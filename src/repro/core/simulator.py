@@ -1,0 +1,261 @@
+"""Epoch-time simulator for FCNN training on ONoC and ENoC — the paper's
+Gem5 stand-in (Section 5.1).
+
+Two interconnect backends:
+
+  * ``ONoCBackend``  — WDM/TDM ring (Section 3.1.2): per transition,
+    ceil(senders/λ)·B time slots; latency is distance-independent (one
+    time-of-flight regardless of hop count), which is why the paper finds
+    FM ≈ RRM ≈ ORRM on ONoC.
+  * ``ENoCBackend``  — electrical 2-D mesh with XY shortest-path routing,
+    2-cycle per-hop routers (Section 5.4), no multicast: a broadcast is a
+    sequence of unicasts.  Per transition the time is the max over links of
+    serialized traffic plus the average path latency — distance (and hence
+    the mapping strategy) matters.
+
+The simulator consumes a Mapping (strategy-placed windows), so all of the
+paper's §4 placement effects are visible to the ENoC backend, and the
+traffic/occupancy traces feed the energy model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Protocol
+
+import numpy as np
+
+from .allocation import Mapping, MappingStrategy, map_cores
+from .onoc_model import (
+    FCNNWorkload,
+    ONoCConfig,
+    compute_time,
+    comm_time,
+    period_layer,
+    slot_time,
+)
+
+__all__ = [
+    "TransitionTraffic",
+    "EpochTrace",
+    "ONoCBackend",
+    "ENoCConfig",
+    "ENoCBackend",
+    "simulate_epoch",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionTraffic:
+    """Data movement out of one period into the next."""
+
+    period: int
+    senders: tuple[int, ...]
+    receivers: tuple[int, ...]
+    bytes_per_sender: float
+    comm_s: float                  # backend-computed transition time
+    hop_bytes: float = 0.0         # Σ bytes × hops (ENoC); 0 for ONoC
+    slots: int = 0                 # TDM slots (ONoC); 0 for ENoC
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochTrace:
+    backend: str
+    strategy: str
+    compute_s: float
+    comm_s: float
+    transitions: tuple[TransitionTraffic, ...]
+    per_period_compute_s: tuple[float, ...]
+    core_busy_s: np.ndarray        # per-core active seconds (compute)
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.comm_s
+
+    @property
+    def total_bytes(self) -> float:
+        return float(
+            sum(t.bytes_per_sender * len(t.senders) for t in self.transitions)
+        )
+
+    @property
+    def total_hop_bytes(self) -> float:
+        return float(sum(t.hop_bytes for t in self.transitions))
+
+
+class _Backend(Protocol):
+    name: str
+
+    def transition_time(
+        self,
+        workload: FCNNWorkload,
+        cfg: ONoCConfig,
+        period: int,
+        mapping: Mapping,
+    ) -> TransitionTraffic: ...
+
+
+def _transition_payload_bytes(
+    workload: FCNNWorkload, cfg: ONoCConfig, period: int, m_i: int
+) -> float:
+    """Bytes each sender core pushes out of ``period``."""
+    x_i = math.ceil(workload.n(period_layer(workload, period)) / m_i)
+    return x_i * workload.batch_size * cfg.bytes_per_value
+
+
+class ONoCBackend:
+    """WDM/TDM ring — Eq. (6) exactly."""
+
+    name = "onoc"
+
+    def transition_time(
+        self,
+        workload: FCNNWorkload,
+        cfg: ONoCConfig,
+        period: int,
+        mapping: Mapping,
+    ) -> TransitionTraffic:
+        senders = mapping.window(period)
+        receivers = mapping.window(period + 1)
+        m_i = len(senders)
+        payload = _transition_payload_bytes(workload, cfg, period, m_i)
+        slots = math.ceil(m_i / cfg.lambda_max)
+        t = comm_time(workload, cfg, period, m_i)
+        return TransitionTraffic(
+            period=period, senders=senders, receivers=receivers,
+            bytes_per_sender=payload, comm_s=t, slots=slots,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ENoCConfig:
+    """Electrical 2-D mesh parameters (paper Section 5.4 + Table 4/5)."""
+
+    hop_cycles: float = 2.0          # per-hop router latency
+    link_bytes_per_cycle: float = 16.0  # 128-bit links, 1 flit/cycle
+    clock_hz: float = 3.4e9
+    channels: int = 4                # 4-channel routers (paper)
+
+    def link_bandwidth_Bps(self) -> float:
+        return self.link_bytes_per_cycle * self.clock_hz
+
+
+class ENoCBackend:
+    """2-D mesh, XY shortest-path, unicast-only broadcast."""
+
+    name = "enoc"
+
+    def __init__(self, enoc: ENoCConfig | None = None):
+        self.enoc = enoc or ENoCConfig()
+
+    def _grid(self, m: int) -> int:
+        return max(1, int(math.ceil(math.sqrt(m))))
+
+    def _xy(self, core: int, side: int) -> tuple[int, int]:
+        return core % side, core // side
+
+    def _hops(self, a: int, b: int, side: int) -> int:
+        ax, ay = self._xy(a, side)
+        bx, by = self._xy(b, side)
+        return abs(ax - bx) + abs(ay - by)
+
+    def transition_time(
+        self,
+        workload: FCNNWorkload,
+        cfg: ONoCConfig,
+        period: int,
+        mapping: Mapping,
+    ) -> TransitionTraffic:
+        senders = mapping.window(period)
+        receivers = mapping.window(period + 1)
+        m_i = len(senders)
+        payload = _transition_payload_bytes(workload, cfg, period, m_i)
+        side = self._grid(mapping.m)
+
+        # Each sender unicasts its payload to every receiver (no multicast).
+        # Traffic model: per-link serialized occupancy with XY routing; the
+        # transition completes when the most-loaded link drains, plus one
+        # max-path latency to account for the pipeline fill.
+        link_load: dict[tuple[int, int, int, int], float] = {}
+        hop_bytes = 0.0
+        max_hops = 0
+        for s in senders:
+            for r in receivers:
+                if r == s:
+                    continue
+                h = self._hops(s, r, side)
+                hop_bytes += payload * h
+                max_hops = max(max_hops, h)
+                # accumulate along the XY path
+                sx, sy = self._xy(s, side)
+                rx, ry = self._xy(r, side)
+                x, y = sx, sy
+                while x != rx:
+                    nx = x + (1 if rx > x else -1)
+                    link_load[(x, y, nx, y)] = link_load.get((x, y, nx, y), 0.0) + payload
+                    x = nx
+                while y != ry:
+                    ny = y + (1 if ry > y else -1)
+                    link_load[(x, y, x, ny)] = link_load.get((x, y, x, ny), 0.0) + payload
+                    y = ny
+        bw = self.enoc.link_bandwidth_Bps()
+        drain = (max(link_load.values()) / bw) if link_load else 0.0
+        latency = max_hops * self.enoc.hop_cycles / self.enoc.clock_hz
+        return TransitionTraffic(
+            period=period, senders=senders, receivers=receivers,
+            bytes_per_sender=payload, comm_s=drain + latency,
+            hop_bytes=hop_bytes,
+        )
+
+
+def simulate_epoch(
+    workload: FCNNWorkload,
+    cfg: ONoCConfig,
+    mapping: Mapping | None = None,
+    strategy: MappingStrategy | str = MappingStrategy.FM,
+    cores_per_period: list[int] | None = None,
+    backend: _Backend | None = None,
+) -> EpochTrace:
+    """Simulate one epoch: per-period compute + per-transition comm.
+
+    Communication transitions follow Eq. (6)'s convention: periods l and 2l
+    send nothing; period 1's hand-off is charged as comm of period... none
+    (Eq. 6 zeroes it; the traffic is still recorded with comm_s as computed
+    by the backend for ENoC, where nothing is free).
+    """
+    backend = backend or ONoCBackend()
+    if mapping is None:
+        mapping = map_cores(workload, cfg, strategy, cores_per_period)
+    l = workload.l
+
+    per_period_compute: list[float] = []
+    busy = np.zeros(mapping.m, dtype=np.float64)
+    for i in range(1, 2 * l + 1):
+        m_i = len(mapping.window(i))
+        f = compute_time(workload, cfg, i, m_i)
+        per_period_compute.append(f)
+        busy[list(mapping.window(i))] += f
+
+    transitions: list[TransitionTraffic] = []
+    comm_total = 0.0
+    for i in range(1, 2 * l):
+        if i in (l, 2 * l):
+            continue
+        tr = backend.transition_time(workload, cfg, i, mapping)
+        if backend.name == "onoc" and i == 1:
+            # Eq. (6): g(m_1) = 0 — the ONoC model folds the period-1
+            # hand-off into Period 0 loading.  Record traffic, zero time.
+            tr = dataclasses.replace(tr, comm_s=0.0)
+        transitions.append(tr)
+        comm_total += tr.comm_s
+
+    return EpochTrace(
+        backend=backend.name,
+        strategy=mapping.strategy.value,
+        compute_s=float(sum(per_period_compute)),
+        comm_s=float(comm_total),
+        transitions=tuple(transitions),
+        per_period_compute_s=tuple(per_period_compute),
+        core_busy_s=busy,
+    )

@@ -1,0 +1,5 @@
+from .pipeline import (  # noqa: F401
+    fcnn_classification_dataset,
+    token_stream,
+    Batcher,
+)

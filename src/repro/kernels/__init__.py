@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships with a pure-jnp oracle (ref.py) and a jit'd public
+wrapper (ops.py) that falls back to the oracle off-TPU.
+"""
+
+from repro.kernels.ops import fcnn_layer, flash_attention, ssd_chunk  # noqa: F401

@@ -1,0 +1,84 @@
+"""Fused FCNN period kernel: act(x @ w + b) with MXU-aligned VMEM tiling.
+
+This is the paper's per-period hot loop (Eq. 1).  On the ONoC each core
+computes X_i neurons over the batch; on TPU one chip computes its neuron
+shard as a blocked GEMM.  Fusing bias+activation removes one HBM round-trip
+of the (M, N) activation tensor — with batch 128 and n_i = 4000 (NN5/NN6)
+that's 2 MB per period per chip saved at ~819 GB/s.
+
+Blocking: grid (M/bm, N/bn, K/bk), K innermost (sequential on TPU), fp32
+accumulator in VMEM scratch; block shapes default to 128/MXU-aligned and
+are clamped to the problem size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fcnn_layer"]
+
+_ACTS = {
+    "sigmoid": jax.nn.sigmoid,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+    "none": lambda z: z,
+}
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps: int, act: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finish():
+        z = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _ACTS[act](z).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k", "interpret"),
+)
+def fcnn_layer(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "sigmoid",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """act(x @ w + b).  x: (M, K); w: (K, N); b: (N,)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"shape ({m},{k})x({k},{n}) not divisible by blocks ({bm},{bn},{bk})"
+        )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=grid[2], act=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,108 @@
+"""Blocked online-softmax (flash) attention for the prefill path.
+
+Grid: (batch·heads, q_blocks, kv_blocks) with the kv dimension innermost
+(sequential on TPU), carrying the running max/denominator/accumulator in
+VMEM scratch across kv steps.  Causal blocks above the diagonal are skipped
+with pl.when — for a full causal sweep that halves both the FLOPs and the
+HBM traffic of the K/V stream.
+
+VMEM budget per step: q (bq·D) + k,v (bkv·D each) + acc (bq·D) + m/l (bq)
+in fp32 — for bq=bkv=512, D=128 that is ~1.3 MB, well inside the ~16 MB
+VMEM of a v5e core with double-buffering headroom.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, kv_steps: int, block_q: int, block_kv: int, causal: bool,
+            scale: float):
+    qi = pl.program_id(1)
+    kvi = pl.program_id(2)
+
+    @pl.when(kvi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: skip blocks strictly above the diagonal
+    run = (not causal) or (kvi * block_kv <= qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]                                   # (bq, D)
+        k = k_ref[0]                                   # (bkv, D)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            cols = kvi * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kvi == kv_steps - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret"))
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    bq, bkv = min(block_q, s), min(block_kv, s)
+    if s % bq or s % bkv:
+        raise ValueError(f"seq {s} not divisible by blocks ({bq},{bkv})")
+    bh = b * h
+    qf = q.reshape(bh, s, d)
+    kf = k.reshape(bh, s, d)
+    vf = v.reshape(bh, s, d)
+    grid = (bh, s // bq, s // bkv)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, kv_steps=grid[2], block_q=bq, block_kv=bkv,
+            causal=causal, scale=1.0 / math.sqrt(d)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

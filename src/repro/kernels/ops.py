@@ -1,0 +1,60 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on a TPU backend the Pallas kernel is used (compiled);
+anywhere else the pure-jnp oracle from ref.py runs — bit-compatible
+semantics, so models and tests can call these unconditionally.  Tests that
+validate the kernels themselves force the Pallas path with
+``force="pallas_interpret"``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fcnn_layer import fcnn_layer as _fcnn_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_chunk as _ssd_pallas
+
+__all__ = ["fcnn_layer", "flash_attention", "ssd_chunk"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(force: str | None) -> str:
+    if force is not None:
+        return force
+    return "pallas" if _on_tpu() else "ref"
+
+
+def fcnn_layer(x, w, b, activation: str = "sigmoid", *,
+               force: str | None = None, **blocks):
+    mode = _mode(force)
+    if mode == "ref":
+        return _ref.fcnn_layer_ref(x, w, b, activation)
+    interp = mode == "pallas_interpret"
+    return _fcnn_pallas(x, w, b, activation, interpret=interp, **blocks)
+
+
+def flash_attention(q, k, v, causal: bool = True, *,
+                    force: str | None = None, **blocks):
+    mode = _mode(force)
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal)
+    interp = mode == "pallas_interpret"
+    return _flash_pallas(q, k, v, causal=causal, interpret=interp, **blocks)
+
+
+def ssd_chunk(x, dt_a, b, c, *, force: str | None = None, **blocks):
+    mode = _mode(force)
+    if mode == "ref":
+        ys, sts, decs = [], [], []
+        f = jax.vmap(_ref.ssd_chunk_ref)
+        return f(x, dt_a, b, c)
+    interp = mode == "pallas_interpret"
+    return _ssd_pallas(x, dt_a, b, c, interpret=interp, **blocks)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose), and the
+CPU execution path of ops.py.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fcnn_layer_ref", "flash_attention_ref", "ssd_chunk_ref"]
+
+
+def fcnn_layer_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                   activation: str = "sigmoid") -> jax.Array:
+    """One FCNN period: act(x @ w + b).  x: (M, K), w: (K, N), b: (N,)."""
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "sigmoid":
+        z = jax.nn.sigmoid(z)
+    elif activation == "relu":
+        z = jax.nn.relu(z)
+    elif activation == "tanh":
+        z = jnp.tanh(z)
+    elif activation == "none":
+        pass
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return z.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D), softmax in fp32."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def ssd_chunk_ref(x: jax.Array, dt_a: jax.Array, b: jax.Array, c: jax.Array):
+    """Intra-chunk SSD for ONE chunk (the Pallas kernel's unit of work).
+
+    x: (Q, H, P); dt_a: (Q, H); b, c: (Q, H, N) (groups pre-broadcast).
+    Returns (y_diag (Q, H, P), chunk_state (H, P, N), decay_out (Q, H)):
+      y_diag[t]    = sum_{s<=t} C_t·B_s exp(sum_{s<k<=t} dtA_k) x_s
+      chunk_state  = sum_s exp(sum_{s<k<=Q} dtA_k) B_s x_s^T
+      decay_out[t] = exp(sum_{k<=t} dtA_k)   (for the inter-chunk readout)
+    """
+    q = x.shape[0]
+    a = dt_a.astype(jnp.float32)
+    cs = jnp.cumsum(a, axis=0)                                 # (Q, H)
+    seg = cs[:, None, :] - cs[None, :, :]                      # (Q, Q, H)
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+    lmat = jnp.where(mask[..., None], jnp.exp(seg), 0.0)       # (Q, Q, H)
+    scores = jnp.einsum("thn,shn->tsh", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    y = jnp.einsum("tsh,tsh,shp->thp", scores, lmat,
+                   x.astype(jnp.float32))
+    decay_state = jnp.exp(cs[-1][None, :] - cs)                # (Q, H)
+    state = jnp.einsum("shn,sh,shp->hpn", b.astype(jnp.float32),
+                       decay_state, x.astype(jnp.float32))
+    decay_out = jnp.exp(cs)
+    return y.astype(x.dtype), state, decay_out

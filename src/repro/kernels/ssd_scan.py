@@ -1,0 +1,95 @@
+"""Mamba2 SSD intra-chunk kernel.
+
+One grid step computes, for a single (batch·chunk, head-block) pair, the
+quadratic intra-chunk term, the chunk's contribution to the running state,
+and the output decay vector (consumed by the inter-chunk jnp scan, which is
+O(n_chunks) and stays outside the kernel):
+
+  y_diag[t] = Σ_{s<=t} (C_t·B_s) exp(Σ_{s<k<=t} dtA_k) x_s
+  state     = Σ_s exp(Σ_{s<k<=Q} dtA_k) B_s x_sᵀ
+  decay_out = exp(cumsum(dtA))
+
+The (Q, Q) decay matrix is built in-register from a cumulative sum — this
+is the part a TPU wants fused: materializing L to HBM at (B, H, C, Q, Q)
+fp32 is Q/(2·P)× the size of the input itself (Q=128, P=64 ⇒ 1×), and the
+fusion removes it entirely.
+
+Head-blocking: heads are independent; block_h heads per step keeps the
+(Q, Q, bh) decay tensor inside VMEM (128·128·8·4B = 512 KB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_chunk"]
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, dec_ref):
+    # shapes: x (1, Q, bh, P); a (1, Q, bh); b/c (1, Q, bh, N)
+    x = x_ref[0].astype(jnp.float32)
+    a = a_ref[0].astype(jnp.float32)
+    bb = b_ref[0].astype(jnp.float32)
+    cc = c_ref[0].astype(jnp.float32)
+    q = x.shape[0]
+
+    cs = jnp.cumsum(a, axis=0)                          # (Q, bh)
+    seg = cs[:, None, :] - cs[None, :, :]               # (Q, Q, bh)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tri = rows >= cols
+    lmat = jnp.where(tri[..., None], jnp.exp(seg), 0.0)  # (Q, Q, bh)
+
+    scores = jnp.einsum("thn,shn->tsh", cc, bb)          # (Q, Q, bh)
+    y = jnp.einsum("tsh,shp->thp", scores * lmat, x)     # (Q, bh, P)
+
+    decay_state = jnp.exp(cs[-1][None, :] - cs)          # (Q, bh)
+    st = jnp.einsum("shn,sh,shp->hpn", bb, decay_state, x)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    st_ref[0] = st
+    dec_ref[0] = jnp.exp(cs)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def ssd_chunk(
+    x: jax.Array,      # (BC, Q, H, P)  batch·chunks flattened
+    dt_a: jax.Array,   # (BC, Q, H)
+    b: jax.Array,      # (BC, Q, H, N)  groups pre-broadcast to heads
+    c: jax.Array,      # (BC, Q, H, N)
+    block_h: int = 8,
+    interpret: bool = False,
+):
+    """Returns (y_diag (BC,Q,H,P), state (BC,H,P,N), decay_out (BC,Q,H))."""
+    bc, q, h, p = x.shape
+    n = b.shape[-1]
+    bh = min(block_h, h)
+    if h % bh:
+        raise ValueError(f"heads {h} not divisible by block_h {bh}")
+    grid = (bc, h // bh)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, bh, p), lambda g, hh: (g, 0, hh, 0)),
+            pl.BlockSpec((1, q, bh), lambda g, hh: (g, 0, hh)),
+            pl.BlockSpec((1, q, bh, n), lambda g, hh: (g, 0, hh, 0)),
+            pl.BlockSpec((1, q, bh, n), lambda g, hh: (g, 0, hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, bh, p), lambda g, hh: (g, 0, hh, 0)),
+            pl.BlockSpec((1, bh, p, n), lambda g, hh: (g, hh, 0, 0)),
+            pl.BlockSpec((1, q, bh), lambda g, hh: (g, 0, hh)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bc, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bc, q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt_a, b, c)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries only data parallelism + cross-pod gradient reduction (DCN-ish
+traffic), never tensor parallelism.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax use).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist, flat on the "data" axis (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,191 @@
+"""jit-compiled train / serve step builders with full sharding closure.
+
+``build_train_step``: (TrainState, batch) -> (TrainState, metrics), with
+in/out shardings derived from the model's logical axes (shape-aware: axes
+that don't divide are demoted — see parallel.sharding.resolve_spec),
+donated state, and optional int8 gradient compression (error-feedback
+residual rides in the state).
+
+``build_prefill_step`` / ``build_decode_step``: the serving pair; decode
+donates the KV cache (in-place update at scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeSpec
+from repro.models.api import Model
+from repro.optim import adamw, clip_by_global_norm
+from repro.parallel.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    shape_aware_shardings,
+)
+from repro.parallel import gradsync
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    grad_compression: str = "none"        # "none" | "int8"
+    microbatches: int = 1
+
+
+def state_axes(model: Model, settings: TrainSettings) -> Params:
+    """Logical axes of the full TrainState (opt state mirrors params)."""
+    p_axes = model.param_axes()
+    st = {
+        "params": p_axes,
+        "opt": {"m": p_axes, "v": p_axes},
+        "step": None,
+    }
+    if settings.grad_compression == "int8":
+        st["residual"] = p_axes
+    return st
+
+
+def init_train_state(model: Model, settings: TrainSettings, key) -> Params:
+    params = model.init(key)
+    opt = adamw(settings.learning_rate, weight_decay=settings.weight_decay)
+    st = {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if settings.grad_compression == "int8":
+        st["residual"] = gradsync.init_residual(params)
+    return st
+
+
+def train_state_spec(model: Model, settings: TrainSettings) -> Params:
+    return jax.eval_shape(
+        lambda k: init_train_state(model, settings, k), jax.random.PRNGKey(0))
+
+
+def build_train_step(
+    model: Model,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    settings: TrainSettings = TrainSettings(),
+    rules: AxisRules = DEFAULT_RULES,
+):
+    """Returns (jitted step, state_shardings, batch_shardings, state_spec)."""
+    opt = adamw(settings.learning_rate, weight_decay=settings.weight_decay)
+
+    state_spec = train_state_spec(model, settings)
+    st_shardings = shape_aware_shardings(
+        state_spec, state_axes(model, settings), mesh, rules)
+    batch_spec = model.input_specs(shape)
+    batch_shardings = shape_aware_shardings(
+        batch_spec, model.batch_axes(shape), mesh, rules)
+
+    def step(state, batch):
+        if settings.microbatches > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape((settings.microbatches,
+                                     x.shape[0] // settings.microbatches)
+                                    + x.shape[1:]), batch)
+            from repro.models.layers import scan_unroll_of
+            loss, grads = gradsync.accumulate_grads(
+                model.loss_fn, state["params"], mb,
+                unroll=scan_unroll_of(model.cfg))
+        else:
+            loss, grads = jax.value_and_grad(model.loss_fn)(
+                state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, settings.grad_clip)
+        new_state = dict(state)
+        if settings.grad_compression == "int8":
+            grads, new_res = gradsync.compress_grads_ef(
+                grads, state["residual"])
+            new_state["residual"] = new_res
+        params, opt_state = opt.update(grads, state["opt"], state["params"],
+                                       state["step"])
+        new_state["params"] = params
+        new_state["opt"] = opt_state
+        new_state["step"] = state["step"] + 1
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P())}
+    jitted = jax.jit(
+        step,
+        in_shardings=(st_shardings, batch_shardings),
+        out_shardings=(st_shardings, metrics_sh),
+        donate_argnums=(0,),
+    )
+    return jitted, st_shardings, batch_shardings, state_spec
+
+
+def _serving_specs(model: Model, mesh: Mesh, shape: ShapeSpec,
+                   rules: AxisRules, max_len: int):
+    p_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = shape_aware_shardings(p_spec, model.param_axes(), mesh, rules)
+    kw = {}
+    if model.cfg.family == "encdec":
+        kw["enc_len"] = shape.seq_len // 2
+    c_spec = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, max_len, **kw))
+    c_sh = shape_aware_shardings(c_spec, model.cache_axes(), mesh, rules)
+    return p_spec, p_sh, c_spec, c_sh
+
+
+def _logits_sharding(model: Model, mesh: Mesh, shape: ShapeSpec,
+                     rules: AxisRules):
+    v = model.cfg.padded_vocab
+    b_ax = rules.physical("activation_batch", mesh)
+    v_ax = rules.physical("activation_vocab", mesh)
+    from repro.parallel.sharding import _axis_size
+    if v_ax is not None and v % _axis_size(mesh, v_ax) != 0:
+        v_ax = None
+    if b_ax is not None and shape.global_batch % _axis_size(mesh, b_ax) != 0:
+        b_ax = None
+    return NamedSharding(mesh, P(b_ax, None, v_ax))
+
+
+def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeSpec,
+                       max_len: int | None = None,
+                       rules: AxisRules = DEFAULT_RULES):
+    max_len = max_len or shape.seq_len
+    p_spec, p_sh, c_spec, c_sh = _serving_specs(model, mesh, shape, rules,
+                                                max_len)
+    batch_spec = model.input_specs(shape)
+    b_sh = shape_aware_shardings(batch_spec, model.batch_axes(shape), mesh,
+                                 rules)
+    logits_sh = _logits_sharding(model, mesh, shape, rules)
+
+    def fn(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                     out_shardings=(logits_sh, c_sh))
+    return jitted, p_sh, b_sh, c_sh
+
+
+def build_decode_step(model: Model, mesh: Mesh, shape: ShapeSpec,
+                      rules: AxisRules = DEFAULT_RULES):
+    decode_shape = ShapeSpec(shape.name, shape.seq_len, shape.global_batch,
+                             "decode")
+    p_spec, p_sh, c_spec, c_sh = _serving_specs(model, mesh, decode_shape,
+                                                rules, shape.seq_len)
+    batch_spec = model.input_specs(decode_shape)
+    b_sh = shape_aware_shardings(
+        batch_spec, model.batch_axes(decode_shape), mesh, rules)
+    logits_sh = _logits_sharding(model, mesh, decode_shape, rules)
+
+    def fn(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, b_sh),
+                     out_shardings=(logits_sh, c_sh),
+                     donate_argnums=(1,))
+    return jitted, p_sh, b_sh, c_sh

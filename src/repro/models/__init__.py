@@ -1,0 +1,1 @@
+"""Architecture zoo (pure functional JAX)."""

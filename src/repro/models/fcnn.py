@@ -1,0 +1,88 @@
+"""The paper's FCNN (MLP) — NN1..NN6 — with per-period ONoC-planned
+parallelism as a first-class feature.
+
+Layer i computes Y = A(W^T X + b) (Eq. 1): sigmoid in hidden layers,
+softmax + cross-entropy (via log-softmax) at the output (paper §5.1).
+
+The ONoC mapping enters through ``period_specs``: per layer, the output-
+neuron axis is sharded at the planner-chosen degree — this is the paper's
+"n_i neurons evenly mapped to m_i cores".  The forward all-gather of layer
+outputs into the next period's cores is the WDM broadcast; JAX AD
+transposes it into the BP reduce-scatter automatically, realizing the
+paper's "senders in Period i become receivers in Period 2l-i+1"
+(Example II) without any hand-written backward pass.
+
+Heterogeneous layer shapes mean this model is NOT scanned — exactly like
+the paper, each period is its own program phase.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_constraint
+
+Params = dict[str, Any]
+
+
+def init(key, layer_sizes: Sequence[int], dtype=jnp.float32) -> Params:
+    """layer_sizes = [n_0, ..., n_l]."""
+    layers = []
+    keys = jax.random.split(key, len(layer_sizes) - 1)
+    for i, k in enumerate(keys):
+        n_in, n_out = layer_sizes[i], layer_sizes[i + 1]
+        w = jax.random.normal(k, (n_in, n_out), jnp.float32) / math.sqrt(n_in)
+        layers.append({
+            "w": w.astype(dtype),
+            "b": jnp.zeros((n_out,), dtype=dtype),
+        })
+    return {"layers": layers}
+
+
+def param_axes(layer_sizes: Sequence[int],
+               degrees: Sequence[int] | None = None) -> Params:
+    """Logical axes per layer.  A layer planned at degree 1 is replicated;
+    otherwise its output-neuron axis carries the "mlp" logical axis (the
+    planner maps it to the mesh axes that realize the degree)."""
+    l = len(layer_sizes) - 1
+    degrees = list(degrees) if degrees is not None else [0] * l
+    layers = []
+    for i in range(l):
+        if degrees[i] == 1:
+            layers.append({"w": (None, None), "b": (None,)})
+        else:
+            layers.append({"w": ("embed", "mlp"), "b": ("mlp",)})
+    return {"layers": layers}
+
+
+def forward(params: Params, x: jax.Array) -> jax.Array:
+    """x: (B, n_0) -> logits (B, n_l).  Period i = one loop iteration."""
+    h = x
+    n = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        z = jnp.einsum("bi,io->bo", h, lp["w"],
+                       preferred_element_type=jnp.float32) + lp["b"].astype(jnp.float32)
+        if i < n - 1:
+            h = jax.nn.sigmoid(z).astype(x.dtype)
+            # the paper's inter-period broadcast: outputs leave this
+            # period's cores for the next period's cores
+            h = shard_constraint(h, ("activation_batch", "activation_mlp"))
+        else:
+            h = z  # output layer: softmax folded into the loss
+    return h
+
+
+def loss_fn(params: Params, batch: Params) -> jax.Array:
+    logits = forward(params, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(forward(params, x), axis=-1) == y).astype(jnp.float32))

@@ -1,0 +1,371 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The block computes, per head h with state size N and head dim P:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T        (state update)
+    y_t = C_t h_t + D x_t                              (readout)
+
+trained with the chunked "SSD" algorithm: intra-chunk quadratic attention-
+like term + inter-chunk recurrence on chunk states, both expressed as
+einsums (this file is also the oracle for kernels/ssd_scan.py).
+
+Sequence-parallel note for the ONoC planner: the inter-chunk recurrence is
+a carry chain (collective-permute on TPU), not a broadcast — outside the
+paper's comm model; see DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import shard_constraint
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# SSD core (chunked scan) — pure jnp reference
+# --------------------------------------------------------------------------
+
+def segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[..., i, j] = sum_{k=j+1..i} x_k
+    for j <= i, -inf above the diagonal."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt_a, b, c, chunk: int, initial_state=None,
+                unroll: bool | int = 1):
+    """Chunked SSD.
+
+    x:    (B, L, H, P)   head inputs (already multiplied by nothing; dt is
+                          folded into B via dt*B per the SSD convention here)
+    dt_a: (B, L, H)      log-decay per step (= dt * A, negative)
+    b, c: (B, L, G, N)   input/output projections (G groups broadcast over H)
+    Returns (y, final_state) with y (B, L, H, P), state (B, H, P, N).
+    """
+    bs, l, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    nc = l // chunk
+    rep = h // g
+
+    xc = x.reshape(bs, nc, chunk, h, p)
+    ac = dt_a.reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)   # (B,H,C,Q)
+    bc = b.reshape(bs, nc, chunk, g, n)
+    cc = c.reshape(bs, nc, chunk, g, n)
+    # broadcast groups over heads
+    bh = jnp.repeat(bc, rep, axis=3)                            # (B,C,Q,H,N)
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                             # (B,H,C,Q)
+
+    # 1. intra-chunk (diagonal blocks)
+    lmat = jnp.exp(segsum(ac))                                  # (B,H,C,Q,Q)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        ch, bh, lmat.astype(ch.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)             # (B,H,C,Q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        bh, decay_states.astype(bh.dtype), xc,
+                        preferred_element_type=jnp.float32)     # (B,C,H,P,N)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])                       # (B,H,C)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bs, h, p, n), dtype=states.dtype)
+
+    def chunk_body(carry, xs):
+        s_c, d_c = xs                                           # (B,H,P,N),(B,H)
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry                                       # emit state *entering* chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)                       # (C,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 2, 0)                   # (C,B,H)
+    final_state, entry_states = lax.scan(
+        chunk_body, initial_state.astype(states.dtype), (states_t, decay_t),
+        unroll=unroll)
+    entry_states = jnp.moveaxis(entry_states, 0, 1)             # (B,C,H,P,N)
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(a_cum)                                # (B,H,C,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       ch, entry_states.astype(ch.dtype),
+                       state_decay.astype(ch.dtype),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(bs, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt_a, b, c):
+    """One-token recurrence.  state: (B,H,P,N); x: (B,H,P); dt_a: (B,H);
+    b, c: (B,G,N).  Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    g = b.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b, rep, axis=1)                             # (B,H,N)
+    ch = jnp.repeat(c, rep, axis=1)
+    decay = jnp.exp(dt_a)[..., None, None]                      # (B,H,1,1)
+    upd = jnp.einsum("bhn,bhp->bhpn", bh, x,
+                     preferred_element_type=jnp.float32)
+    new_state = state * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = d_in + 2 * g * n
+    return d_in, g, n, h, conv_dim
+
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    d_in, g, n, h, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * g * n + h
+    s = 1.0 / math.sqrt(d)
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba convention)
+    u = jax.random.uniform(ks[2], (h,), minval=math.log(1e-3),
+                           maxval=math.log(1e-1))
+    dt_init = jnp.exp(u)
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "norm": L.init_rms_norm(d, dtype),
+        "in_proj": {"w": (jax.random.normal(ks[0], (d, proj_out)) * s).astype(dtype)},
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim))
+                   * (1.0 / math.sqrt(cfg.conv_kernel))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dtype),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), dtype=jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gated_norm": L.init_rms_norm(d_in, dtype),
+        "out_proj": {"w": (jax.random.normal(ks[3], (d_in, d))
+                           * (1.0 / math.sqrt(d_in))).astype(dtype)},
+    }
+
+
+def block_axes(cfg: ModelConfig) -> Params:
+    return {
+        "norm": {"scale": (None,)},
+        "in_proj": {"w": ("embed", "mlp")},       # fused proj sharded on TP
+        "conv_w": ("conv_kernel", "activation_mlp"),
+        "conv_b": ("activation_mlp",),
+        "a_log": (None,),
+        "d_skip": (None,),
+        "dt_bias": (None,),
+        "gated_norm": {"scale": ("activation_mlp",)},
+        "out_proj": {"w": ("mlp", "embed")},
+    }
+
+
+def _split_proj(z_xbc_dt, cfg: ModelConfig):
+    d_in, g, n, h, conv_dim = _dims(cfg)
+    z = z_xbc_dt[..., :d_in]
+    xbc = z_xbc_dt[..., d_in : d_in + conv_dim]
+    dt = z_xbc_dt[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev_tail=None):
+    """Depthwise causal conv along L.  xbc: (B, L, C); conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    if prev_tail is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev_tail
+    xp = jnp.concatenate([pad, xbc], axis=1)                    # (B, L+K-1, C)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):                                          # K is tiny (4)
+        out = out + xp[:, i : i + xbc.shape[1], :].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    out = out + conv_b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype), xp[:, -(k - 1):, :]
+
+
+def block_apply(p: Params, hidden, positions, cfg: ModelConfig,
+                initial_state=None, conv_tail=None, return_states=False):
+    """Full-sequence mamba2 mixer with pre-norm and residual."""
+    d_in, g, n, h, conv_dim = _dims(cfg)
+    bsz, l, _ = hidden.shape
+    x_in = L.rms_norm(p["norm"], hidden, cfg.norm_eps)
+    zxbcdt = jnp.einsum("bld,dk->blk", x_in, p["in_proj"]["w"],
+                        preferred_element_type=jnp.float32).astype(hidden.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    xs = xbc[..., :d_in].reshape(bsz, l, h, d_in // h)
+    b = xbc[..., d_in : d_in + g * n].reshape(bsz, l, g, n)
+    c = xbc[..., d_in + g * n :].reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(p["a_log"])                                     # (H,)
+    dt_a = dt * a                                                # (B,L,H) <= 0
+    # fold dt into the input branch (SSD convention: x <- x * dt)
+    x_dt = (xs.astype(jnp.float32) * dt[..., None]).astype(xs.dtype)
+    y, final_state = ssd_chunked(x_dt, dt_a, b, c, cfg.ssm_chunk,
+                                 initial_state,
+                                 unroll=L.scan_unroll_of(cfg))
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, l, d_in)
+    y = L.rms_norm(p["gated_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"]["w"],
+                     preferred_element_type=jnp.float32).astype(hidden.dtype)
+    out = shard_constraint(out, ("activation_batch", "residual_length",
+                                 "activation_embed"))
+    res = hidden + out
+    if return_states:
+        return res, (final_state, tail)
+    return res
+
+
+def block_decode(p: Params, hidden, ssm_state, conv_tail, cfg: ModelConfig):
+    """One-token step.  hidden: (B,1,d)."""
+    d_in, g, n, h, conv_dim = _dims(cfg)
+    bsz = hidden.shape[0]
+    x_in = L.rms_norm(p["norm"], hidden, cfg.norm_eps)
+    zxbcdt = jnp.einsum("bld,dk->blk", x_in, p["in_proj"]["w"],
+                        preferred_element_type=jnp.float32).astype(hidden.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_tail)
+    xs = xbc[:, 0, :d_in].reshape(bsz, h, d_in // h)
+    b = xbc[:, 0, d_in : d_in + g * n].reshape(bsz, g, n)
+    c = xbc[:, 0, d_in + g * n :].reshape(bsz, g, n)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    x_dt = (xs.astype(jnp.float32) * dt1[..., None]).astype(xs.dtype)
+    y, new_state = ssd_decode_step(ssm_state, x_dt, dt1 * a, b, c)
+    y = y + xs * p["d_skip"][None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, 1, d_in)
+    y = L.rms_norm(p["gated_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"]["w"],
+                     preferred_element_type=jnp.float32).astype(hidden.dtype)
+    return hidden + out, new_state, tail
+
+
+# --------------------------------------------------------------------------
+# whole LM (attention-free)
+# --------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> Params:
+    k_e, k_l, k_u = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(k_l, cfg.n_layers)
+    p: Params = {
+        "embedding": L.init_embedding(k_e, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(keys),
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_embedding(k_u, cfg.padded_vocab, cfg.d_model, dtype)
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    base = block_axes(cfg)
+    stacked = jax.tree.map(lambda ax: ("layers",) + tuple(ax), base,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    p: Params = {
+        "embedding": {"w": ("vocab", "table_embed")},
+        "layers": stacked,
+        "final_norm": {"scale": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": ("vocab", "table_embed")}
+    return p
+
+
+def forward(params, batch, cfg: ModelConfig):
+    h = L.embed(params["embedding"], batch["tokens"], onehot=cfg.embed_onehot)
+
+    def body(carry, lp):
+        return block_apply(lp, carry, None, cfg), None
+
+    body = L.remat_wrap(cfg, body)
+    h, _ = lax.scan(body, h, params["layers"], unroll=L.scan_unroll_of(cfg))
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(emb, h)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """SSM 'cache' = recurrent state; constant size — the long_500k story."""
+    d_in, g, n, h, conv_dim = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, d_in // h, n), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim),
+                          dtype=dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    return {
+        "ssm": ("layers", "cache_batch", "activation_heads", None, None),
+        "conv": ("layers", "cache_batch", None, "activation_mlp"),
+        "len": ("cache_batch",),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    h = L.embed(params["embedding"], batch["tokens"], onehot=cfg.embed_onehot)
+    bsz, s = batch["tokens"].shape
+
+    def body(carry, lp):
+        hh = carry
+        hh, (state, tail) = block_apply(lp, hh, None, cfg, return_states=True)
+        return hh, (state, tail)
+
+    body = L.remat_wrap(cfg, body)
+    h, (states, tails) = lax.scan(body, h, params["layers"],
+                                  unroll=L.scan_unroll_of(cfg))
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(emb, h[:, -1:, :])
+    cache = {"ssm": states.astype(jnp.float32), "conv": tails,
+             "len": jnp.full((bsz,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    h = L.embed(params["embedding"], batch["tokens"])
+
+    def body(carry, xs):
+        lp, st, tail = xs
+        hh, new_st, new_tail = block_decode(lp, carry, st, tail, cfg)
+        return hh, (new_st, new_tail)
+
+    h, (new_ssm, new_conv) = lax.scan(
+        body, h, (params["layers"], cache["ssm"], cache["conv"]),
+        unroll=L.scan_unroll_of(cfg))
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(emb, h)
+    return logits, {"ssm": new_ssm, "conv": new_conv, "len": cache["len"] + 1}

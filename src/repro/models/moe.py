@@ -1,0 +1,215 @@
+"""Token-choice top-k Mixture-of-Experts transformer (granite-3.0-moe,
+qwen2-moe with shared experts).
+
+Dispatch uses the grouped one-hot einsum formulation (Mesh-TF / MaxText
+style): tokens are split into groups of ``moe_group_size``; within a group
+each expert accepts at most C = ceil(group · k / E · capacity_factor)
+tokens (overflow dropped, standard for capacity-based MoE).  The dispatch
+einsum contracts a (G, T, E, C) one-hot against (G, T, d) activations and,
+with tokens sharded on "data" and experts on "model" (EP), XLA lowers the
+boundary into the canonical MoE all-to-all pair.
+
+The router aux (load-balance) loss is threaded through the layer-scan carry
+— no out-of-band state, no leaked tracers.
+
+ONoC-planner note (DESIGN.md §Arch-applicability): experts map onto the
+paper's "neurons evenly mapped to m_i cores" with the all-to-all replacing
+the ring broadcast; g() gains an all-to-all term in core/planner.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.parallel.sharding import shard_constraint
+
+Params = dict[str, Any]
+
+
+def init_moe_mlp(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.param_dtype)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = L.init_mlp(
+            ks[4], d, cfg.n_shared_experts * cfg.moe_d_ff, dtype)
+    return p
+
+
+def moe_mlp_axes(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = dict(L.MLP_AXES)
+    return p
+
+
+def moe_mlp(p: Params, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    tokens = x.reshape(b * s, d)
+    n = tokens.shape[0]
+    g_size = min(cfg.moe_group_size, n)
+    n_groups = -(-n // g_size)                                  # ceil
+    padded = n_groups * g_size
+    valid = (jnp.arange(padded) < n).astype(jnp.float32)
+    if padded > n:
+        tokens = jnp.pad(tokens, ((0, padded - n), (0, 0)))
+    tokens = tokens.reshape(n_groups, g_size, d)
+    valid = valid.reshape(n_groups, g_size)                     # (G,T)
+
+    logits = jnp.einsum("gtd,de->gte", tokens.astype(jnp.float32),
+                        p["router"])                            # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (G,T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)   # (G,T,k,E)
+    gates_full = jnp.einsum("gtk,gtke->gte", gate_vals, onehot)
+    sel = jnp.sum(onehot, axis=2)                               # (G,T,E) 0/1
+    # padding tokens route nowhere and consume no expert capacity
+    sel = sel * valid[..., None]
+    gates_full = gates_full * valid[..., None]
+
+    cap = max(1, int(math.ceil(g_size * k / e * cfg.capacity_factor)))
+    pos = (jnp.cumsum(sel, axis=1) - 1.0) * sel                 # queue slot
+    keep = sel * (pos < cap)
+    disp = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    disp = disp * keep[..., None]                               # (G,T,E,C)
+    combine = gates_full[..., None] * disp
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(sel, axis=1)
+    ce = jnp.mean(probs, axis=1)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * e
+
+    xin = jnp.einsum("gtec,gtd->gecd", disp.astype(x.dtype), tokens,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    xin = shard_constraint(xin, (None, "activation_exp", None, None))
+    hg = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"],
+                    preferred_element_type=jnp.float32)
+    hu = jnp.einsum("gecd,edf->gecf", xin, p["w_up"],
+                    preferred_element_type=jnp.float32)
+    hh = (jax.nn.silu(hg) * hu).astype(x.dtype)
+    out_e = jnp.einsum("gecf,efd->gecd", hh, p["w_down"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), out_e,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    y = y.reshape(padded, d)[:n]
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], x)
+    y = shard_constraint(y, ("activation_batch", "residual_length",
+                             "activation_embed"))
+    return y, aux
+
+
+# ------------------------- block + assembly -------------------------------
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model, dtype),
+        "attn": L.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dtype,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm),
+        "ln2": L.init_rms_norm(cfg.d_model, dtype),
+        "moe": init_moe_mlp(key=k2, cfg=cfg),
+    }
+
+
+def block_axes(cfg: ModelConfig) -> Params:
+    return {
+        "ln1": {"scale": (None,)},
+        "attn": L.attention_param_axes(cfg.qkv_bias, cfg.qk_norm),
+        "ln2": {"scale": (None,)},
+        "moe": moe_mlp_axes(cfg),
+    }
+
+
+def block_apply_aux(p: Params, h, positions, cfg: ModelConfig):
+    a = L.attention(p["attn"], L.rms_norm(p["ln1"], h, cfg.norm_eps),
+                    positions, theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                    eps=cfg.norm_eps, causal=True,
+                    unroll=L.scan_unroll_of(cfg),
+                    chunk_threshold=cfg.attn_chunk_threshold)
+    h = h + a
+    y, aux = moe_mlp(p["moe"], L.rms_norm(p["ln2"], h, cfg.norm_eps), cfg)
+    return h + y, aux
+
+
+def block_apply(p: Params, h, positions, cfg: ModelConfig):
+    return block_apply_aux(p, h, positions, cfg)[0]
+
+
+def block_decode(p: Params, h, ck, cv, cache_len, positions, cfg: ModelConfig):
+    a, ck, cv = L.decode_attention(
+        p["attn"], L.rms_norm(p["ln1"], h, cfg.norm_eps), ck, cv, cache_len,
+        positions, theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        eps=cfg.norm_eps, window=cfg.attn_window)
+    h = h + a
+    y, _ = moe_mlp(p["moe"], L.rms_norm(p["ln2"], h, cfg.norm_eps), cfg)
+    return h + y, ck, cv
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    return T.init(key, cfg, init_one=init_block)
+
+def param_axes(cfg: ModelConfig) -> Params:
+    return T.param_axes(cfg, one_axes=block_axes)
+
+def forward(params, batch, cfg: ModelConfig):
+    return T.forward(params, batch, cfg, apply_one=block_apply)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Cross-entropy + router aux, aux threaded through the scan carry."""
+    h = T._embed_in(params, batch, cfg)
+    positions = T._positions_of(batch, cfg)
+
+    def body(carry, lp):
+        hh, aux = carry
+        hh, a = block_apply_aux(lp, hh, positions, cfg)
+        return (hh, aux + a), None
+
+    body = L.remat_wrap(cfg, body)
+    (h, aux), _ = lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                           params["layers"], unroll=L.scan_unroll_of(cfg))
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(emb, h)
+    loss = L.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss + cfg.router_aux_coef * aux / cfg.n_layers
+
+
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    return T.prefill(params, batch, cfg, max_len, apply_one=block_apply)
+
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    return T.decode_step(params, cache, batch, cfg, decode_one=block_decode)

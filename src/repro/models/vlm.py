@@ -1,0 +1,46 @@
+"""Qwen2-VL-style VLM backbone: the dense transformer with M-RoPE.
+
+The vision frontend (ViT patch encoder, dynamic resolution) is a STUB per
+the assignment — ``input_specs`` provides precomputed patch/text embeddings
+(B, S, d_model) and a 3-stream position tensor (3, B, S) for M-RoPE
+(temporal / height / width).  Everything else delegates to transformer.py;
+cfg.mrope_sections activates the sectioned rotary in layers.apply_mrope.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+Params = dict[str, Any]
+
+init = T.init
+param_axes = T.param_axes
+forward = T.forward
+loss_fn = T.loss_fn
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+prefill = T.prefill
+decode_step = T.decode_step
+
+
+def make_text_positions(batch_size: int, seq_len: int) -> jnp.ndarray:
+    """Text-only M-RoPE positions: all three streams equal (the Qwen2-VL
+    convention for pure-text segments)."""
+    pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                           (batch_size, seq_len))
+    return jnp.broadcast_to(pos, (3, batch_size, seq_len))
+
+
+def make_image_positions(batch_size: int, t: int, h: int, w: int) -> jnp.ndarray:
+    """Grid M-RoPE positions for a (t, h, w) patch grid, flattened to a
+    sequence: temporal/height/width streams index their own grid axis."""
+    tt = jnp.repeat(jnp.arange(t), h * w)
+    hh = jnp.tile(jnp.repeat(jnp.arange(h), w), t)
+    ww = jnp.tile(jnp.arange(w), t * h)
+    pos = jnp.stack([tt, hh, ww], axis=0).astype(jnp.int32)   # (3, t*h*w)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch_size, t * h * w))

@@ -1,0 +1,300 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention block
+(arXiv:2411.15242) applied every ``shared_attn_every`` mamba layers.
+
+The shared block's weights are reused at every invocation (the zamba2
+signature); each invocation keeps its own KV cache.  Following the paper,
+the shared block consumes concat(h, h0) — the current hidden state and the
+original embeddings — projected back to d_model.
+
+Mamba layers are scanned in segments of ``shared_attn_every``; the shared
+block sits between segments, so the HLO holds one mamba body + one
+attention body regardless of depth.
+
+For long_500k decode the shared block's KV cache is windowed to
+cfg.attn_window (32k) — attention is O(window) per token while the SSM
+carries unbounded context, which is what makes this arch long-context
+runnable (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.parallel.sharding import shard_constraint
+
+Params = dict[str, Any]
+
+
+def _segments(cfg: ModelConfig) -> list[int]:
+    """Mamba-layer counts per segment; a shared-attn invocation follows each
+    full segment."""
+    every = cfg.shared_attn_every or cfg.n_layers
+    full, leftover = divmod(cfg.n_layers, every)
+    return [every] * full + ([leftover] if leftover else [])
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    every = cfg.shared_attn_every or cfg.n_layers
+    return cfg.n_layers // every
+
+
+def init_shared_block(key, cfg: ModelConfig) -> Params:
+    k0, k1, k2 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    return {
+        "in_proj": {"w": (jax.random.normal(k0, (2 * d, d))
+                          * (1.0 / math.sqrt(2 * d))).astype(dtype)},
+        "ln1": L.init_rms_norm(d, dtype),
+        "attn": L.init_attention(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, dtype),
+        "ln2": L.init_rms_norm(d, dtype),
+        "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def shared_block_axes(cfg: ModelConfig) -> Params:
+    return {
+        "in_proj": {"w": ("embed", None)},
+        "ln1": {"scale": (None,)},
+        "attn": L.attention_param_axes(),
+        "ln2": {"scale": (None,)},
+        "mlp": dict(L.MLP_AXES),
+    }
+
+
+def shared_block_apply(p: Params, h, h0, positions, cfg: ModelConfig):
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = jnp.einsum("bld,dk->blk", x, p["in_proj"]["w"],
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    a = L.attention(p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                    positions, theta=cfg.rope_theta, eps=cfg.norm_eps,
+                    causal=True, window=cfg.attn_window,
+                    unroll=L.scan_unroll_of(cfg),
+                    chunk_threshold=cfg.attn_chunk_threshold)
+    x = x + a
+    x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return h + x
+
+
+def shared_block_decode(p: Params, h, h0, ck, cv, cache_len, positions,
+                        cfg: ModelConfig):
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = jnp.einsum("bld,dk->blk", x, p["in_proj"]["w"],
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    # The KV buffer is sized to attn_window (ring buffer): once cache_len
+    # exceeds it, wrap the write slot; the full buffer is then the window,
+    # so no extra window masking is needed.
+    buf = ck.shape[1]
+    a, ck, cv = L.decode_attention(
+        p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps), ck, cv, cache_len,
+        positions, theta=cfg.rope_theta, eps=cfg.norm_eps,
+        write_pos=cache_len % buf)
+    x = x + a
+    x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps))
+    return h + x, ck, cv
+
+
+def shared_block_kv(p: Params, h, h0, positions, cfg: ModelConfig):
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = jnp.einsum("bld,dk->blk", x, p["in_proj"]["w"],
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    return L.prefill_attention_kv(p["attn"],
+                                  L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                                  positions, theta=cfg.rope_theta,
+                                  eps=cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# assembly
+# --------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> Params:
+    k_e, k_m, k_s, k_u = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(k_m, cfg.n_layers)
+    p: Params = {
+        "embedding": L.init_embedding(k_e, cfg.padded_vocab, cfg.d_model, dtype),
+        "mamba": jax.vmap(lambda k: M.init_block(k, cfg))(keys),
+        "shared": init_shared_block(k_s, cfg),
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_embedding(k_u, cfg.padded_vocab, cfg.d_model, dtype)
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    mam = jax.tree.map(lambda ax: ("layers",) + tuple(ax), M.block_axes(cfg),
+                       is_leaf=lambda x: isinstance(x, tuple))
+    p: Params = {
+        "embedding": {"w": ("vocab", "table_embed")},
+        "mamba": mam,
+        "shared": shared_block_axes(cfg),
+        "final_norm": {"scale": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = {"w": ("vocab", "table_embed")}
+    return p
+
+
+def _slice_stacked(tree: Params, start: int, count: int) -> Params:
+    return jax.tree.map(lambda x: lax.slice_in_dim(x, start, start + count, axis=0),
+                        tree)
+
+
+def _scan_mamba(stacked, h, cfg, collect_states=False):
+    def body(carry, lp):
+        if collect_states:
+            hh, (st, tail) = M.block_apply(lp, carry, None, cfg,
+                                           return_states=True)
+            return hh, (st, tail)
+        return M.block_apply(lp, carry, None, cfg), None
+
+    body = L.remat_wrap(cfg, body)
+    return lax.scan(body, h, stacked, unroll=L.scan_unroll_of(cfg))
+
+
+def forward(params, batch, cfg: ModelConfig):
+    h = L.embed(params["embedding"], batch["tokens"], onehot=cfg.embed_onehot)
+    h0 = h
+    bsz, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    off = 0
+    for seg_idx, seg in enumerate(_segments(cfg)):
+        stacked = _slice_stacked(params["mamba"], off, seg)
+        h, _ = _scan_mamba(stacked, h, cfg)
+        off += seg
+        if seg == (cfg.shared_attn_every or cfg.n_layers):
+            h = shared_block_apply(params["shared"], h, h0, positions, cfg)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(emb, h)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    d_in, g, n, h, conv_dim = M._dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    inv = n_shared_invocations(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache_len = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, d_in // h, n), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim),
+                          dtype=dtype),
+        "k": jnp.zeros((inv, batch, cache_len, kv, hd), dtype=dtype),
+        "v": jnp.zeros((inv, batch, cache_len, kv, hd), dtype=dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    return {
+        "ssm": ("layers", "cache_batch", "activation_heads", None, None),
+        "conv": ("layers", "cache_batch", None, "activation_mlp"),
+        "k": ("layers", "cache_batch", "cache_length", "cache_kv_heads",
+              "cache_head_dim"),
+        "v": ("layers", "cache_batch", "cache_length", "cache_kv_heads",
+              "cache_head_dim"),
+        "len": ("cache_batch",),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    h = L.embed(params["embedding"], batch["tokens"], onehot=cfg.embed_onehot)
+    h0 = h
+    bsz, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+    cache_len = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+
+    ssm_states, conv_tails, ks, vs = [], [], [], []
+    off = 0
+    for seg in _segments(cfg):
+        stacked = _slice_stacked(params["mamba"], off, seg)
+        h, (st, tail) = _scan_mamba(stacked, h, cfg, collect_states=True)
+        ssm_states.append(st)
+        conv_tails.append(tail)
+        off += seg
+        if seg == (cfg.shared_attn_every or cfg.n_layers):
+            k, v = shared_block_kv(params["shared"], h, h0, positions, cfg)
+            pad = cache_len - k.shape[1]
+            if pad >= 0:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            else:  # windowed: keep the most recent ``cache_len`` entries
+                k, v = k[:, -cache_len:], v[:, -cache_len:]
+            ks.append(k)
+            vs.append(v)
+            h = shared_block_apply(params["shared"], h, h0, positions, cfg)
+
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(emb, h[:, -1:, :])
+    kv_hd = (cfg.n_kv_heads, cfg.resolved_head_dim)
+    empty = jnp.zeros((0, bsz, cache_len) + kv_hd, dtype=h.dtype)
+    cache = {
+        "ssm": jnp.concatenate(ssm_states, axis=0).astype(jnp.float32),
+        "conv": jnp.concatenate(conv_tails, axis=0),
+        "k": jnp.stack(ks, axis=0) if ks else empty,
+        "v": jnp.stack(vs, axis=0) if vs else empty,
+        "len": jnp.full((bsz,), min(s, cache_len), jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig):
+    h = L.embed(params["embedding"], batch["tokens"])
+    h0 = h
+    bsz = h.shape[0]
+    cache_len = cache["len"]
+    pos = cache_len[:, None].astype(jnp.int32)
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    off, inv = 0, 0
+    for seg in _segments(cfg):
+        stacked = _slice_stacked(params["mamba"], off, seg)
+        ssm_seg = lax.slice_in_dim(cache["ssm"], off, off + seg, axis=0)
+        conv_seg = lax.slice_in_dim(cache["conv"], off, off + seg, axis=0)
+
+        def body(carry, xs):
+            lp, st, tail = xs
+            hh, st2, tail2 = M.block_decode(lp, carry, st, tail, cfg)
+            return hh, (st2, tail2)
+
+        h, (st2, tail2) = lax.scan(body, h, (stacked, ssm_seg, conv_seg),
+                                   unroll=L.scan_unroll_of(cfg))
+        new_ssm.append(st2)
+        new_conv.append(tail2)
+        off += seg
+        if seg == (cfg.shared_attn_every or cfg.n_layers):
+            h, ck, cv = shared_block_decode(
+                params["shared"], h, h0, cache["k"][inv], cache["v"][inv],
+                cache_len, pos, cfg)
+            new_k.append(ck)
+            new_v.append(cv)
+            inv += 1
+
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    emb = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed(emb, h)
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "k": jnp.stack(new_k, axis=0) if new_k else cache["k"],
+        "v": jnp.stack(new_v, axis=0) if new_v else cache["v"],
+        "len": cache_len + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,9 @@
+from .optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    adamw,
+    sgd,
+    momentum,
+    clip_by_global_norm,
+)
+from .schedules import constant, cosine_decay, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,115 @@
+"""Minimal pytree optimizers (pure JAX, optax-style API).
+
+Optimizer state mirrors the parameter pytree, so it inherits the exact
+parameter sharding (FSDP'd moments for free).  Moments are kept in fp32
+regardless of the parameter dtype (bf16-safe training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jax.Array | float], tuple[Params, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _f32_like(p):
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)
+                          ).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": jax.tree.map(_f32_like, params)}
+
+    def update(grads, state, params, step):
+        eta = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                               m, grads)
+        else:
+            upd = m
+        new = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - eta * u).astype(p.dtype),
+            params, upd)
+        return new, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr_fn, b1, b2, eps, weight_decay):
+    def init(params):
+        return {
+            "m": jax.tree.map(_f32_like, params),
+            "v": jax.tree.map(_f32_like, params),
+        }
+
+    def update(grads, state, params, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        eta = lr_fn(step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        mhat_scale = 1.0 / (1.0 - b1 ** step)
+        vhat_scale = 1.0 / (1.0 - b2 ** step)
+
+        def upd(p, m_, v_):
+            u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * u).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    return _adam_core(lr_fn, b1, b2, eps, 0.0)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    return _adam_core(lr_fn, b1, b2, eps, weight_decay)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr), jittable."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup: int, steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(1, steps - warmup), final_frac)
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(1, warmup)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+    return fn

@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_mesh,
+    named_sharding,
+    shard_constraint,
+    tree_shardings,
+)

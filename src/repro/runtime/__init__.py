@@ -1,0 +1,2 @@
+from .fault_tolerance import TrainingSupervisor, StragglerMonitor  # noqa: F401
+from .elastic import ElasticPlanner  # noqa: F401

@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single host CPU device — the dry-run (and only the
+# dry-run) forces 512 devices via its own XLA_FLAGS before jax init.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

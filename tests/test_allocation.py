@@ -1,0 +1,169 @@
+"""Mapping-strategy properties (paper Section 4, Theorem 2, Algorithm 1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.allocation import (
+    MappingStrategy,
+    expected_reuse,
+    map_cores,
+    neuron_assignment,
+    reuse_counts,
+)
+from repro.core.analyses import (
+    hotspot_consecutive_periods,
+    max_memory_requirement_bytes,
+    max_path_length,
+    memory_per_core_bytes,
+    state_transitions,
+    state_transitions_closed_form,
+)
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig, optimal_cores
+
+sizes_st = st.lists(st.integers(8, 400), min_size=3, max_size=6).map(
+    lambda mid: [50] + mid + [10])
+cfg_st = st.builds(ONoCConfig, m=st.sampled_from([100, 333, 1000]),
+                   lambda_max=st.sampled_from([8, 64]))
+
+
+def _mk(sizes, cfg, strat):
+    w = FCNNWorkload(sizes, batch_size=2)
+    mp = map_cores(w, cfg, strat)
+    return w, mp
+
+
+@given(sizes_st, cfg_st,
+       st.sampled_from(list(MappingStrategy)))
+def test_window_sizes_match_allocation(sizes, cfg, strat):
+    w, mp = _mk(sizes, cfg, strat)
+    stars = optimal_cores(w, cfg)
+    for i, m_i in enumerate(stars, start=1):
+        assert len(mp.window(i)) == m_i
+        assert all(0 <= c < cfg.m for c in mp.window(i))
+        # Eq. (11): BP window is the FP window
+        assert mp.window(i) == mp.window(2 * w.l - i + 1)
+
+
+@given(sizes_st, cfg_st)
+def test_fm_hotspot_is_2l(sizes, cfg):
+    """Theorem 2: FM keeps core 0 busy for all 2l periods."""
+    w, mp = _mk(sizes, cfg, MappingStrategy.FM)
+    assert hotspot_consecutive_periods(mp) == 2 * w.l
+
+
+@given(sizes_st, cfg_st)
+def test_rrm_hotspot_bound(sizes, cfg):
+    """Theorem 2: RRM <= 2 consecutive periods when adjacent periods fit
+    in one ring round."""
+    w, mp = _mk(sizes, cfg, MappingStrategy.RRM)
+    ms = mp.cores_per_period
+    if all(ms[i] + ms[i + 1] <= cfg.m for i in range(len(ms) - 1)):
+        assert hotspot_consecutive_periods(mp) <= 2
+
+
+@given(sizes_st, cfg_st)
+def test_orrm_hotspot_bound(sizes, cfg):
+    """Theorem 2 / Lemma 2: ORRM <= 4 consecutive periods under the
+    one-round condition."""
+    w, mp = _mk(sizes, cfg, MappingStrategy.ORRM)
+    ms, r = mp.cores_per_period, mp.reuse
+    if all(ms[i] + ms[i + 1] - r[i + 1] <= cfg.m for i in range(len(ms) - 1)):
+        assert hotspot_consecutive_periods(mp) <= 4
+
+
+@given(sizes_st, cfg_st)
+def test_reuse_counts_eq17(sizes, cfg):
+    w = FCNNWorkload(sizes, batch_size=1)
+    ms = optimal_cores(w, cfg)
+    r = reuse_counts(ms, cfg.m)
+    er = expected_reuse(ms, cfg.m)
+    assert r[0] == 0
+    for i in range(1, len(ms)):
+        assert r[i] <= round(er)
+        assert r[i] <= ms[i]
+        assert r[i] <= ms[i - 1] - r[i - 1]
+        assert r[i] >= 0
+    if sum(ms) <= cfg.m:
+        assert all(x == 0 for x in r)      # Eq. (16) first branch
+
+
+@given(sizes_st, cfg_st)
+def test_orrm_overlap_matches_reuse(sizes, cfg):
+    w, mp = _mk(sizes, cfg, MappingStrategy.ORRM)
+    for i in range(1, w.l):
+        overlap = set(mp.windows[i - 1]) & set(mp.windows[i])
+        # planned reuse r_{i+1} cores are shared between period i and i+1
+        # (wrap-around can only add overlap)
+        assert len(overlap) >= mp.reuse[i]
+
+
+@given(sizes_st, cfg_st, st.sampled_from(list(MappingStrategy)))
+def test_neuron_assignment_balanced(sizes, cfg, strat):
+    """Algorithm 1 lines 3/8: even mapping — per-core neuron counts in a
+    window differ by at most 1."""
+    w, mp = _mk(sizes, cfg, strat)
+    asg = neuron_assignment(w, mp)
+    for layer, cores in asg.items():
+        counts = np.bincount(cores, minlength=cfg.m)
+        active = counts[list(set(mp.windows[layer - 1]))]
+        assert active.max() - active.min() <= 1
+        assert counts.sum() == w.n(layer)
+
+
+@given(sizes_st, cfg_st)
+def test_fm_state_transitions_closed_form(sizes, cfg):
+    """Table 1's FM formula is exact."""
+    w, mp = _mk(sizes, cfg, MappingStrategy.FM)
+    assert state_transitions(mp) == state_transitions_closed_form(mp)
+
+
+@given(sizes_st, cfg_st)
+def test_state_transition_ranking(sizes, cfg):
+    """Table 1 ranking: FM <= ORRM <= RRM (exact counts)."""
+    w = FCNNWorkload(sizes, batch_size=1)
+    t = {s: state_transitions(map_cores(w, cfg, s))
+         for s in MappingStrategy}
+    assert t[MappingStrategy.FM] <= t[MappingStrategy.ORRM]
+    assert t[MappingStrategy.ORRM] <= t[MappingStrategy.RRM]
+
+
+@given(sizes_st, cfg_st)
+def test_memory_ranking(sizes, cfg):
+    """Table 3 ranking: RRM <= ORRM <= FM for worst-core memory, under the
+    one-round condition."""
+    w = FCNNWorkload(sizes, batch_size=2)
+    ms = optimal_cores(w, cfg)
+    mems = {}
+    for s in MappingStrategy:
+        mp = map_cores(w, cfg, s, ms)
+        mems[s] = max_memory_requirement_bytes(w, mp)
+    if sum(ms) <= cfg.m:
+        assert mems[MappingStrategy.RRM] <= mems[MappingStrategy.FM] + 1e-9
+        assert mems[MappingStrategy.ORRM] <= mems[MappingStrategy.FM] + 1e-9
+
+
+@given(sizes_st, cfg_st)
+def test_memory_conservation(sizes, cfg):
+    """Total SRAM demand is strategy-independent (same neurons stored)."""
+    w = FCNNWorkload(sizes, batch_size=2)
+    totals = {
+        s: memory_per_core_bytes(w, map_cores(w, cfg, s)).sum()
+        for s in MappingStrategy
+    }
+    vals = list(totals.values())
+    assert all(abs(v - vals[0]) < 1e-6 for v in vals)
+
+
+@given(sizes_st, cfg_st)
+def test_path_length_ranking(sizes, cfg):
+    """Table 2 ranking: FM has the shortest max path, under one-round
+    placement."""
+    w = FCNNWorkload(sizes, batch_size=1)
+    ms = optimal_cores(w, cfg)
+    if sum(ms) > cfg.m:
+        return  # wrap-around voids the closed-form ordering
+    paths = {s: max_path_length(map_cores(w, cfg, s, ms))
+             for s in MappingStrategy}
+    assert paths[MappingStrategy.FM] <= paths[MappingStrategy.RRM]
+    assert paths[MappingStrategy.FM] <= paths[MappingStrategy.ORRM]

@@ -1,0 +1,120 @@
+"""Properties of the paper's analytical model (Section 3, Lemma 1)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.onoc_model import (
+    FCNNWorkload,
+    ONoCConfig,
+    brute_force_optimal_cores,
+    comm_time,
+    compute_time,
+    epoch_time,
+    optimal_cores,
+    optimal_epoch_time,
+    prediction_error,
+    theta,
+)
+from repro.configs.nn_benchmarks import NN_BENCHMARKS
+
+sizes_st = st.lists(st.integers(4, 600), min_size=3, max_size=7).map(
+    lambda mid: [97] + mid + [10])
+cfg_st = st.builds(
+    ONoCConfig,
+    m=st.sampled_from([64, 250, 1000]),
+    lambda_max=st.sampled_from([4, 8, 64]),
+)
+batch_st = st.sampled_from([1, 8, 32])
+
+
+@given(sizes_st, cfg_st, batch_st)
+def test_lemma1_satisfies_constraints(sizes, cfg, bs):
+    w = FCNNWorkload(sizes, batch_size=bs)
+    stars = optimal_cores(w, cfg)
+    for i, m in enumerate(stars, start=1):
+        assert 1 <= m <= cfg.phi * cfg.m          # Eq. (9)
+        assert m <= w.n(i)                         # Eq. (10)
+
+
+@given(sizes_st, cfg_st, batch_st, st.randoms())
+def test_optimal_beats_random_allocations(sizes, cfg, bs, rng):
+    w = FCNNWorkload(sizes, batch_size=bs)
+    t_opt, stars, _ = optimal_epoch_time(w, cfg, refine_plateau=True)
+    t_sim, _ = epoch_time(w, cfg, brute_force_optimal_cores(w, cfg))
+    # the brute-force optimum lower-bounds every allocation incl. Lemma 1's
+    assert t_sim <= t_opt * (1 + 1e-9)
+    for _ in range(3):
+        cand = [rng.randint(1, min(int(cfg.phi * cfg.m), w.n(i)))
+                for i in range(1, w.l + 1)]
+        t_rand, _ = epoch_time(w, cfg, cand)
+        assert t_sim <= t_rand * (1 + 1e-9)
+
+
+@given(sizes_st, cfg_st)
+def test_theta_formula(sizes, cfg):
+    w = FCNNWorkload(sizes, batch_size=1)
+    for i in range(1, w.l + 1):
+        n_i, n_prev = w.n(i), w.n(i - 1)
+        beta = w.beta(2 * w.l - i + 1)
+        expected = n_i * cfg.lambda_max * (beta * (n_prev + 1) + w.alpha(i))
+        assert math.isclose(theta(w, cfg, i), expected)
+
+
+@given(sizes_st, cfg_st, batch_st)
+def test_comm_time_zero_periods(sizes, cfg, bs):
+    """Eq. (6): no comm in periods 1, l and 2l."""
+    w = FCNNWorkload(sizes, batch_size=bs)
+    l = w.l
+    for i in (1, l, 2 * l):
+        assert comm_time(w, cfg, i, 4) == 0.0
+
+
+@given(sizes_st, cfg_st, batch_st)
+def test_compute_time_monotone_in_cores(sizes, cfg, bs):
+    w = FCNNWorkload(sizes, batch_size=bs)
+    for i in (1, w.l):
+        ts = [compute_time(w, cfg, i, m) for m in (1, 2, 4, 8)]
+        assert all(a >= b - 1e-15 for a, b in zip(ts, ts[1:]))
+
+
+@pytest.mark.parametrize("name", sorted(NN_BENCHMARKS))
+def test_nn_benchmark_prediction_error(name):
+    """Table 7 analogue: plateau-aware APE and APD stay small with the
+    closed-form refinement."""
+    apes, apds = [], []
+    for bs in (1, 32):
+        for lam in (8, 64):
+            w = FCNNWorkload(NN_BENCHMARKS[name], batch_size=bs)
+            cfg = ONoCConfig(lambda_max=lam)
+            _, plateau, apd = prediction_error(w, cfg, refine_plateau=True)
+            apes.append(plateau)
+            apds.append(apd)
+    assert float(np.mean(apes)) <= 0.023   # the paper's 2.3% bound
+    assert float(np.mean(apds)) <= 0.05    # the paper's APD bound
+
+
+def test_epoch_time_period_structure():
+    w = FCNNWorkload([784, 100, 10], batch_size=4)
+    cfg = ONoCConfig(m=64, lambda_max=8)
+    t, periods = epoch_time(w, cfg, [32, 10])
+    assert len(periods) == 2 * w.l
+    # Eq. (11): BP period 2l-i+1 reuses FP period i's cores
+    for i in range(1, w.l + 1):
+        assert periods[i - 1].m == periods[2 * w.l - i].m
+    assert t == pytest.approx(sum(p.total_s for p in periods))
+
+
+def test_invalid_workloads_rejected():
+    with pytest.raises(ValueError):
+        FCNNWorkload([10])
+    with pytest.raises(ValueError):
+        FCNNWorkload([10, 0, 5])
+    with pytest.raises(ValueError):
+        FCNNWorkload([10, 5], batch_size=0)
+    w = FCNNWorkload([784, 100, 10])
+    cfg = ONoCConfig(m=64)
+    with pytest.raises(ValueError):
+        epoch_time(w, cfg, [100, 10])  # exceeds phi*m

@@ -1,0 +1,159 @@
+"""Beyond-paper performance features: fused CE, one-hot embedding, flash
+custom-VJP attention, scatter cache writes, dynamic rule/dtype scopes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.configs import smoke_config
+from repro.models.api import get_model
+from repro.parallel.sharding import AxisRules, active_rules, use_rules
+
+RNG = np.random.default_rng(11)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- fused CE
+
+def test_fused_ce_matches_plain():
+    B, S, D, V = 2, 32, 16, 64
+    emb = {"w": _arr((V, D))}
+    h = _arr((B, S, D))
+    lab = jnp.asarray(RNG.integers(0, V, size=(B, S)), jnp.int32)
+    a = L.cross_entropy_loss(L.unembed(emb, h), lab)
+    b = L.fused_unembed_ce(emb, h, lab, chunk=8)
+    assert float(jnp.abs(a - b)) < 1e-5
+    ga = jax.grad(lambda hh: L.cross_entropy_loss(L.unembed(emb, hh), lab))(h)
+    gb = jax.grad(lambda hh: L.fused_unembed_ce(emb, hh, lab, chunk=8))(h)
+    np.testing.assert_allclose(ga, gb, atol=1e-6)
+
+
+def test_fused_ce_non_divisible_falls_back():
+    emb = {"w": _arr((64, 16))}
+    h = _arr((2, 30, 16))   # 30 % 512 != 0
+    lab = jnp.asarray(RNG.integers(0, 64, size=(2, 30)), jnp.int32)
+    a = L.cross_entropy_loss(L.unembed(emb, h), lab)
+    b = L.fused_unembed_ce(emb, h, lab)
+    assert float(jnp.abs(a - b)) < 1e-5
+
+
+def test_fused_ce_in_model_loss():
+    cfg = smoke_config("qwen3-14b")
+    m_plain = get_model(cfg)
+    m_fused = get_model(cfg.replace(fused_ce=True))
+    params = m_plain.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    a = m_plain.loss_fn(params, batch)
+    b = m_fused.loss_fn(params, batch)
+    assert float(jnp.abs(a - b)) < 1e-4
+
+
+# --------------------------------------------------------- one-hot embedding
+
+@pytest.mark.parametrize("length", [16, 24])
+def test_onehot_embed_matches_gather(length):
+    p = {"w": _arr((64, 8))}
+    tok = jnp.asarray(RNG.integers(0, 64, size=(2, length)), jnp.int32)
+    a = L.embed(p, tok, onehot=False)
+    b = L.embed(p, tok, onehot=True, chunk=8)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_onehot_embed_in_model():
+    cfg = smoke_config("granite-3-2b")
+    m = get_model(cfg)
+    m_oh = get_model(cfg.replace(embed_onehot=True))
+    params = m.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    a = m.forward(params, {"tokens": tok})
+    b = m_oh.forward(params, {"tokens": tok})
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# ------------------------------------------------------ flash VJP attention
+
+@pytest.mark.parametrize("B,Lq,H,KV,D,chunk", [
+    (2, 64, 8, 4, 16, 16),
+    (1, 32, 4, 4, 8, 8),
+    (2, 48, 6, 2, 16, 16),
+])
+def test_flash_vjp_matches_dense(B, Lq, H, KV, D, chunk):
+    q, k, v = _arr((B, Lq, H, D)), _arr((B, Lq, KV, D)), _arr((B, Lq, KV, D))
+    idx = jnp.arange(Lq)
+    mask = (idx[None, :] <= idx[:, None])[None, None, None]
+    ref = L._sdpa(q, k, v, mask)
+    out = L._sdpa_chunked_causal(q, k, v, chunk, 1)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+    f_ref = lambda *a: (L._sdpa(*a, mask) ** 2).sum()        # noqa: E731
+    f_new = lambda *a: (L._sdpa_chunked_causal(*a, chunk, 1) ** 2).sum()  # noqa: E731
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_new = jax.grad(f_new, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_new):
+        np.testing.assert_allclose(a, b, atol=5e-5)
+
+
+def test_flash_vjp_bf16():
+    q = _arr((1, 32, 4, 16), jnp.bfloat16)
+    k = _arr((1, 32, 2, 16), jnp.bfloat16)
+    v = _arr((1, 32, 2, 16), jnp.bfloat16)
+    out = L._sdpa_chunked_causal(q, k, v, 8, 1)
+    idx = jnp.arange(32)
+    mask = (idx[None, :] <= idx[:, None])[None, None, None]
+    ref = L._sdpa(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+# -------------------------------------------------------- scatter cache write
+
+def test_scatter_cache_write_positions():
+    cfg = smoke_config("granite-3-2b")
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    logits, cache = m.prefill(params, {"tokens": tok}, 12)
+    k_before = np.asarray(cache["k"])
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, cache2 = m.decode_step(params, cache, {"tokens": nxt})
+    k_after = np.asarray(cache2["k"])
+    # only slot 8 changed; slots 0..7 and 9..11 untouched
+    np.testing.assert_array_equal(k_before[:, :, :8], k_after[:, :, :8])
+    np.testing.assert_array_equal(k_before[:, :, 9:], k_after[:, :, 9:])
+    assert np.abs(k_after[:, :, 8]).sum() > 0
+
+
+# ----------------------------------------------------------- dynamic scopes
+
+def test_use_rules_scope():
+    base = active_rules()
+    override = AxisRules().override(activation_batch=None)
+    with use_rules(override):
+        assert active_rules() is override
+        with use_rules(base):
+            assert active_rules() is base
+        assert active_rules() is override
+    assert active_rules() is base
+
+
+def test_use_accum_dtype_scope():
+    assert L.pet() == jnp.float32
+    with L.use_accum_dtype("bfloat16"):
+        assert L.pet() == jnp.bfloat16
+    assert L.pet() == jnp.float32
+
+
+def test_bf16_accum_model_still_close():
+    cfg = smoke_config("granite-3-2b")
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    a = m.loss_fn(params, {"tokens": tok, "labels": tok})
+    with L.use_accum_dtype("bfloat16"):
+        b = m.loss_fn(params, {"tokens": tok, "labels": tok})
+    assert abs(float(a) - float(b)) / float(a) < 0.05

@@ -1,0 +1,100 @@
+"""Sharding resolution + the ONoC->TPU planner."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig
+from repro.core.planner import (
+    TPUTarget,
+    feasible_degrees,
+    plan_fcnn,
+    plan_gemm_period,
+)
+from repro.parallel.sharding import (
+    AxisRules,
+    DEFAULT_RULES,
+    resolve_spec,
+    shape_aware_shardings,
+)
+
+
+def _mesh():
+    n = len(jax.devices())
+    return Mesh(np.array(jax.devices()).reshape(n, 1), ("data", "model"))
+
+
+@given(st.integers(1, 4096), st.sampled_from(["vocab", "heads", "mlp"]))
+def test_resolve_spec_always_divides(dim, axis):
+    mesh = _mesh()
+    spec = resolve_spec((dim,), (axis,), mesh, DEFAULT_RULES)
+    ways = 1
+    entry = spec[0]
+    if entry is not None:
+        names = (entry,) if isinstance(entry, str) else entry
+        for a in names:
+            ways *= mesh.shape[a]
+    assert dim % ways == 0
+
+
+def test_resolve_spec_demotes_prefix():
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs.reshape(1, 1), ("data", "model"))
+    rules = AxisRules().override(activation_batch=("pod", "data"))
+    # "pod" missing on this mesh: silently dropped
+    spec = resolve_spec((4, 4), ("activation_batch", None), mesh, rules)
+    assert spec == P(("data",), None)
+
+
+def test_shape_aware_shardings_structure_check():
+    mesh = _mesh()
+    spec = {"a": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+    with pytest.raises(ValueError):
+        shape_aware_shardings(spec, {"a": (None,), "b": (None,)}, mesh)
+
+
+def test_feasible_degrees():
+    feas = feasible_degrees({"data": 16, "model": 16})
+    assert feas[1] == ()
+    assert feas[16] in (("model",), ("data",))
+    assert feas[256] == ("model", "data")
+    feas3 = feasible_degrees({"pod": 2, "data": 16, "model": 16})
+    assert 512 in feas3
+
+
+def test_plan_fcnn_degrees_feasible_and_capped():
+    w = FCNNWorkload([784, 1500, 784, 1000, 500, 10], batch_size=8)
+    cfg = ONoCConfig(lambda_max=64)
+    plan = plan_fcnn(w, cfg, {"data": 16, "model": 16})
+    feas = set(feasible_degrees({"data": 16, "model": 16}))
+    for p in plan.periods:
+        assert p.degree in feas
+        assert p.degree <= w.n(p.period)
+        assert p.degree <= 256
+    # the output layer (10 neurons) can never exceed 10 ways
+    assert plan.periods[-1].degree <= 10
+
+
+def test_plan_gemm_period_tradeoff():
+    """Small GEMMs plan low degrees, huge GEMMs saturate — the paper's
+    compute/communication trade-off on TPU terms."""
+    mesh = {"data": 16, "model": 16}
+    small, _, _ = plan_gemm_period(
+        flops=1e6, act_bytes_in=1e6, act_bytes_out=1e6, mesh_axes=mesh)
+    huge, _, _ = plan_gemm_period(
+        flops=1e15, act_bytes_in=1e6, act_bytes_out=1e6, mesh_axes=mesh)
+    assert small <= huge
+    assert huge == 256
+
+
+def test_plan_gemm_costs_monotone_compute():
+    mesh = {"data": 4, "model": 4}
+    _, _, costs = plan_gemm_period(
+        flops=1e12, act_bytes_in=0.0, act_bytes_out=0.0, mesh_axes=mesh)
+    # with zero comm, cost strictly decreases with degree
+    degs = sorted(costs)
+    vals = [costs[d] for d in degs]
+    assert all(a > b for a, b in zip(vals, vals[1:]))

@@ -1,0 +1,105 @@
+"""Simulator + energy model behaviour (paper Section 5 claims, in
+relative/structural form)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    ENoCBackend,
+    FCNNWorkload,
+    MappingStrategy,
+    ONoCConfig,
+    enoc_energy,
+    fgp_cores,
+    fnp_cores,
+    map_cores,
+    onoc_energy,
+    optimal_cores,
+    simulate_epoch,
+)
+from repro.core.analyses import analyze_mapping
+from repro.core.onoc_model import epoch_time
+
+sizes_st = st.lists(st.integers(16, 500), min_size=2, max_size=5).map(
+    lambda mid: [80] + mid + [10])
+
+
+@given(sizes_st, st.sampled_from([8, 64]))
+def test_onoc_time_strategy_invariant(sizes, lam):
+    """Paper §5.4: FM/RRM/ORRM are equivalent on ONoC (distance-free)."""
+    w = FCNNWorkload(sizes, batch_size=4)
+    cfg = ONoCConfig(lambda_max=lam)
+    ts = []
+    for s in MappingStrategy:
+        tr = simulate_epoch(w, cfg, strategy=s)
+        ts.append(tr.total_s)
+    assert max(ts) - min(ts) < 1e-12
+
+
+@given(sizes_st)
+def test_simulator_matches_analytic_model(sizes):
+    """The ONoC simulator must agree with Eq. (7) (same model, two paths)."""
+    w = FCNNWorkload(sizes, batch_size=2)
+    cfg = ONoCConfig(lambda_max=8)
+    cores = optimal_cores(w, cfg)
+    t_analytic, _ = epoch_time(w, cfg, cores)
+    tr = simulate_epoch(w, cfg, strategy="fm", cores_per_period=cores)
+    assert tr.total_s == pytest.approx(t_analytic, rel=1e-9)
+
+
+@given(sizes_st)
+def test_optimal_no_worse_than_baselines(sizes):
+    """Table 8's direction: OPT <= FNP and OPT <= FGP in epoch time."""
+    w = FCNNWorkload(sizes, batch_size=8)
+    cfg = ONoCConfig(lambda_max=8)
+    t = {}
+    for name, cores in (
+        ("opt", optimal_cores(w, cfg, refine_plateau=True)),
+        ("fgp", fgp_cores(w, cfg)),
+        ("fnp", fnp_cores(w, cfg)),
+    ):
+        t[name] = simulate_epoch(w, cfg, strategy="fm",
+                                 cores_per_period=cores).total_s
+    assert t["opt"] <= t["fgp"] * (1 + 1e-9)
+    assert t["opt"] <= t["fnp"] * (1 + 1e-9)
+
+
+def test_onoc_beats_enoc_at_scale():
+    """Fig. 10a: ONoC total time below ENoC, gap growing with cores."""
+    w = FCNNWorkload([784, 1500, 784, 1000, 500, 10], batch_size=64)
+    cfg = ONoCConfig(lambda_max=64)
+    gaps = []
+    for fixed in (40, 150, 350):
+        cores = fnp_cores(w, cfg, fixed)
+        mp = map_cores(w, cfg, "fm", cores)
+        t_o = simulate_epoch(w, cfg, mapping=mp).total_s
+        t_e = simulate_epoch(w, cfg, mapping=mp,
+                             backend=ENoCBackend()).total_s
+        assert t_o < t_e
+        gaps.append((t_e - t_o) / t_e)
+    assert gaps[0] < gaps[-1]
+
+
+def test_enoc_energy_grows_with_hops():
+    """Fig. 10b's driver: ENoC dynamic energy scales with bytes×hops."""
+    w = FCNNWorkload([784, 1000, 500, 10], batch_size=8)
+    cfg = ONoCConfig(lambda_max=64)
+    es = []
+    for fixed in (40, 350):
+        cores = fnp_cores(w, cfg, fixed)
+        mp = map_cores(w, cfg, "fm", cores)
+        tr = simulate_epoch(w, cfg, mapping=mp, backend=ENoCBackend())
+        rep = analyze_mapping(w, mp)
+        es.append(enoc_energy(tr, mp, rep.state_transitions).dynamic_j)
+    assert es[1] > es[0]
+
+
+def test_energy_breakdown_positive():
+    w = FCNNWorkload([784, 1000, 500, 10], batch_size=8)
+    cfg = ONoCConfig(lambda_max=64)
+    mp = map_cores(w, cfg, "orrm")
+    rep = analyze_mapping(w, mp)
+    tr_o = simulate_epoch(w, cfg, mapping=mp)
+    e = onoc_energy(tr_o, mp, rep.state_transitions)
+    assert e.static_j > 0 and e.dynamic_j > 0 and e.compute_j > 0
+    assert e.total_j == pytest.approx(e.static_j + e.dynamic_j + e.compute_j)

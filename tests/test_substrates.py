@@ -1,0 +1,172 @@
+"""Checkpointing, optimizers, gradient sync, data pipeline, runtime."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step
+from repro.data import Batcher, fcnn_classification_dataset, token_stream
+from repro.optim import adam, adamw, clip_by_global_norm, momentum, sgd
+from repro.parallel import gradsync
+from repro.runtime import StragglerMonitor, TrainingSupervisor
+
+
+# ------------------------------------------------------------- checkpoint
+
+def _state(v=0.0):
+    return {"params": {"w": jnp.full((4, 4), v), "b": jnp.zeros((4,))},
+            "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state(3.0)
+    ck.save(10, st)
+    assert latest_step(str(tmp_path)) == 10
+    restored = ck.restore(10, jax.eval_shape(lambda: st))
+    np.testing.assert_array_equal(restored["params"]["w"], st["params"]["w"])
+    assert int(restored["step"]) == 3
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(float(s)), blocking=(s % 2 == 0))
+    ck.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _state(1.0))
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+    meta = ck.meta(5)
+    assert meta["step"] == 5
+
+
+# ------------------------------------------------------------- optimizers
+
+@pytest.mark.parametrize("opt_fn", [
+    lambda: sgd(0.1),
+    lambda: momentum(0.05, 0.9),
+    lambda: adam(0.1),
+    lambda: adamw(0.1, weight_decay=0.0),
+])
+def test_optimizers_minimize_quadratic(opt_fn):
+    opt = opt_fn()
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params)
+    for step in range(300):
+        grads = {"x": 2 * (params["x"] - target)}
+        params, state = opt.update(grads, state, params, step)
+    np.testing.assert_allclose(params["x"], target, atol=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0))
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------- gradsync
+
+def test_accumulate_grads_matches_full_batch():
+    w = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    x = jnp.arange(8.0).reshape(4, 2)
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"]) ** 2)
+
+    full_loss, full_grads = jax.value_and_grad(loss)(w, {"x": x})
+    mb = {"x": x.reshape(2, 2, 2)}
+    acc_loss, acc_grads = gradsync.accumulate_grads(loss, w, mb)
+    np.testing.assert_allclose(acc_loss, full_loss, rtol=1e-6)
+    # mean over microbatches == full-batch mean for equal-sized microbatches
+    np.testing.assert_allclose(acc_grads["w"], full_grads["w"], rtol=1e-6)
+
+
+def test_int8_error_feedback_compensates():
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    res = gradsync.init_residual(g_true)
+    applied = jnp.zeros((64,))
+    for _ in range(50):
+        deq, res = gradsync.compress_grads_ef(g_true, res)
+        applied = applied + deq["w"]
+    # over many steps the error feedback makes the mean applied grad
+    # converge to the true grad
+    np.testing.assert_allclose(applied / 50, g_true["w"], atol=2e-2)
+
+
+def test_quantize_roundtrip_bound():
+    g = jnp.linspace(-3, 3, 256)
+    q, s = gradsync.quantize_int8(g)
+    err = jnp.max(jnp.abs(gradsync.dequantize_int8(q, s) - g))
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+# -------------------------------------------------------------------- data
+
+def test_batcher_deterministic_and_resumable():
+    x, y = fcnn_classification_dataset(64, input_dim=8)
+    b1 = Batcher({"x": x, "y": y}, batch_size=8)
+    batches = [next(b1) for _ in range(3)]
+    state = b1.state()
+    nxt = next(b1)
+
+    b2 = Batcher({"x": x, "y": y}, batch_size=8)
+    b2.restore(state)
+    nxt2 = next(b2)
+    np.testing.assert_array_equal(nxt["x"], nxt2["x"])
+    # first batches reproducible from scratch
+    b3 = Batcher({"x": x, "y": y}, batch_size=8)
+    np.testing.assert_array_equal(batches[0]["x"], next(b3)["x"])
+
+
+def test_token_stream_learnable_structure():
+    s = token_stream(10000, vocab=50, seed=0)
+    follows = np.mean(s[1:] == (s[:-1] * 7 + 3) % 50)
+    # the vectorized injection reads pre-update predecessors, so chained
+    # follows dilute the realized rate below the nominal 0.5
+    assert follows > 0.2        # injected bigram structure is present
+    assert s.min() >= 0 and s.max() < 50
+
+
+# ----------------------------------------------------------------- runtime
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    sup = TrainingSupervisor(ck, checkpoint_every=2, max_retries=1,
+                             backoff_s=0.0)
+    x, y = fcnn_classification_dataset(32, input_dim=4)
+    batches = Batcher({"x": x, "y": y}, batch_size=4)
+
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 6:       # persistent failure at one step
+            raise RuntimeError("injected fault")
+        return {"v": state["v"] + 1.0}, {"loss": 1.0}
+
+    state, history = sup.run({"v": jnp.zeros(())}, step_fn, batches, 8)
+    assert len(history) == 8
+    # checkpoint+restart happened (extra calls for retry + replay)
+    assert calls["n"] > 8
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(deadline_factor=2.0)
+    for i in range(10):
+        mon.observe(i, 0.1)
+    assert mon.observe(10, 1.0) is True
+    assert 10 in mon.straggler_steps
+    assert mon.observe(11, 0.1) is False

@@ -1,0 +1,53 @@
+"""RWA schedule validity (paper Section 4.6 / Fig. 6)."""
+
+from hypothesis import given, strategies as st
+
+from repro.core.allocation import MappingStrategy, map_cores
+from repro.core.onoc_model import FCNNWorkload, ONoCConfig
+from repro.core.wavelength import UNASSIGNED, assign_wavelengths, schedule_epoch
+
+
+@given(st.integers(1, 40), st.integers(1, 40), st.sampled_from([2, 8, 64]),
+       st.integers(45, 100))
+def test_schedule_covers_all_senders_once(n_send, n_recv, lam, m):
+    senders = list(range(n_send))
+    receivers = list(range(40, 40 + n_recv))
+    ws = assign_wavelengths(senders, receivers, lam, m + 60)
+    # TDM slot count is exactly Eq. (6)'s ceiling
+    assert ws.n_slots == -(-len(senders) // lam)
+    seen = [s for slot in ws.slots for s in slot.senders]
+    assert sorted(seen) == sorted(set(senders))
+    for slot in ws.slots:
+        # within a slot wavelengths are distinct and within budget
+        assert len(set(slot.wavelengths)) == len(slot.senders) <= lam
+
+
+@given(st.integers(2, 30), st.integers(2, 30), st.sampled_from([2, 8]))
+def test_wm_matrix_consistency(n_send, n_recv, lam):
+    m = 80
+    senders = list(range(n_send))
+    receivers = list(range(40, 40 + n_recv))
+    ws = assign_wavelengths(senders, receivers, lam, m)
+    for slot in ws.slots:
+        for s, w in zip(slot.senders, slot.wavelengths):
+            for r in receivers:
+                if r != s:
+                    assert ws.wm[s, r] == w
+    # no assignments outside the sender/receiver sets
+    for i in range(m):
+        for j in range(m):
+            if ws.wm[i, j] != UNASSIGNED:
+                assert i in senders and j in receivers
+
+
+def test_epoch_schedule_structure():
+    w = FCNNWorkload([64, 128, 96, 10], batch_size=1)
+    cfg = ONoCConfig(m=100, lambda_max=8)
+    mp = map_cores(w, cfg, MappingStrategy.RRM)
+    schedules = schedule_epoch(mp, cfg.lambda_max)
+    # communicating transitions: 1..l-1 (FP) and l+1..2l-1 (BP)
+    periods = [s.period for s in schedules]
+    l = w.l
+    assert periods == [i for i in range(1, 2 * l) if i != l]
+    for s in schedules:
+        assert s.direction == ("cw" if s.period < l else "ccw")
