@@ -1,0 +1,19 @@
+# Developer gate — the same checks the PR driver runs.
+#
+#   make verify       tier-1 pytest suite
+#   make bench-smoke  one fast benchmark (table7) as a sanity smoke
+#   make bench-json   full benchmark sweep -> BENCH_fcnn.json
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify bench-smoke bench-json
+
+verify:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --only table7_prediction
+
+bench-json:
+	$(PY) -m benchmarks.run --json BENCH_fcnn.json

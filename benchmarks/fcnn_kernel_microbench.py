@@ -1,0 +1,93 @@
+"""Microbenchmark of the FCNN hot loop: fused-kernel dispatch vs a plain
+einsum implementation, forward and forward+backward.
+
+On TPU the fused path runs the Pallas forward + custom-VJP dgrad/wgrad
+kernels; on CPU it dispatches to the jnp oracle, so the comparison
+degenerates to oracle-vs-einsum (≈parity) but keeps the harness exercised
+and the JSON schema stable across PRs — the perf trajectory is tracked by
+``benchmarks/run.py --json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+# Reduced NN1: real NN1 layer-1 geometry (784 in) at batch 128, plus the
+# 10-class output period.  Small enough for CPU CI, shaped like the paper.
+SHAPES = (
+    ("nn1_layer1", 128, 784, 1000, "sigmoid"),
+    ("nn1_output", 128, 500, 10, "none"),
+)
+WARMUP = 2
+ITERS = 10
+
+
+def _einsum_layer(x, w, b, activation):
+    z = jnp.einsum("bi,io->bo", x, w,
+                   preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "sigmoid":
+        z = jax.nn.sigmoid(z)
+    return z.astype(x.dtype)
+
+
+def _time(fn, *args) -> float:
+    for _ in range(WARMUP):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / ITERS
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(11)
+    rows = []
+    for name, m, k, n, act in SHAPES:
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        t = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+
+        fused_fwd = jax.jit(lambda x, w, b: ops.fcnn_layer(x, w, b, act))
+        einsum_fwd = jax.jit(lambda x, w, b: _einsum_layer(x, w, b, act))
+
+        def _loss(fwd):
+            def f(x, w, b):
+                y = fwd(x, w, b)
+                return jnp.mean((y.astype(jnp.float32) - t) ** 2)
+            return f
+
+        fused_fwdbwd = jax.jit(jax.grad(
+            _loss(lambda x, w, b: ops.fcnn_layer(x, w, b, act)),
+            argnums=(0, 1, 2)))
+        einsum_fwdbwd = jax.jit(jax.grad(
+            _loss(lambda x, w, b: _einsum_layer(x, w, b, act)),
+            argnums=(0, 1, 2)))
+
+        fwd_fused_s = _time(fused_fwd, x, w, b)
+        fwd_einsum_s = _time(einsum_fwd, x, w, b)
+        bwd_fused_s = _time(fused_fwdbwd, x, w, b)
+        bwd_einsum_s = _time(einsum_fwdbwd, x, w, b)
+        rows.append({
+            "case": name, "m": m, "k": k, "n": n, "act": act,
+            "backend": jax.default_backend(),
+            "fwd_fused_us": 1e6 * fwd_fused_s,
+            "fwd_einsum_us": 1e6 * fwd_einsum_s,
+            "fwdbwd_fused_us": 1e6 * bwd_fused_s,
+            "fwdbwd_einsum_us": 1e6 * bwd_einsum_s,
+            "fwd_speedup": fwd_einsum_s / max(fwd_fused_s, 1e-12),
+            "fwdbwd_speedup": bwd_einsum_s / max(bwd_fused_s, 1e-12),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,20 +1,28 @@
 """Benchmark driver — one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 
 Prints one CSV block per benchmark: ``benchmark,wall_us,key=value,...``
 (one line per result row), then a summary of reproduction checks.
+
+``--json PATH`` additionally emits a machine-readable report (e.g.
+``BENCH_fcnn.json``) with per-benchmark wall time, all result rows and the
+reproduction checks, so the perf trajectory is tracked across PRs — the
+``fcnn_kernel_microbench`` entry times the fused fwd / fwd+bwd kernel
+dispatch against a plain einsum implementation.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 sys.path.insert(0, "src")
 
 from benchmarks import (  # noqa: E402
+    fcnn_kernel_microbench,
     fig7_percore_sweep,
     fig10_onoc_vs_enoc,
     strategy_analysis,
@@ -32,6 +40,7 @@ BENCHMARKS = {
     "fig10_onoc_vs_enoc": fig10_onoc_vs_enoc.run,
     "strategy_analysis": strategy_analysis.run,
     "roofline_report": roofline_report.run,
+    "fcnn_kernel_microbench": fcnn_kernel_microbench.run,
 }
 
 
@@ -41,12 +50,31 @@ def _fmt(v) -> str:
     return str(v).replace(",", ";")
 
 
+def _jsonable(v):
+    """Coerce numpy scalars/arrays and nested containers to JSON types."""
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if hasattr(v, "item") and getattr(v, "ndim", None) in (None, 0):
+        return v.item()
+    if hasattr(v, "tolist"):
+        return v.tolist()
+    return v
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable report (BENCH_fcnn.json)")
     args = ap.parse_args()
+    if args.only and args.only not in BENCHMARKS:
+        ap.error(f"unknown benchmark {args.only!r} "
+                 f"(choose from {', '.join(sorted(BENCHMARKS))})")
 
     checks: list[str] = []
+    report: dict = {"benchmarks": {}, "checks": []}
     for name, fn in BENCHMARKS.items():
         if args.only and name != args.only:
             continue
@@ -57,10 +85,20 @@ def main() -> None:
             fields = ",".join(f"{k}={_fmt(v)}" for k, v in row.items())
             print(f"{name},{us:.0f},{fields}")
         checks.extend(_reproduction_checks(name, rows))
+        report["benchmarks"][name] = {
+            "wall_us": us,
+            "rows": _jsonable(rows),
+        }
 
     print("\n# reproduction checks")
     for c in checks:
         print(c)
+
+    if args.json:
+        report["checks"] = checks
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"\n# json report -> {args.json}")
 
 
 def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
@@ -109,6 +147,12 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
             for lam in (8, 64))
         out.append(f"check,thm2,FM hotspot >= ORRM hotspot -> "
                    f"{'PASS' if ok else 'FAIL'}")
+    if name == "fcnn_kernel_microbench":
+        backend = rows[0]["backend"]
+        worst = min(r["fwdbwd_speedup"] for r in rows)
+        out.append(f"check,kernels,fused fwd+bwd vs einsum on {backend}: "
+                   f"min speedup {worst:.2f}x "
+                   f"({'informational off-TPU' if backend != 'tpu' else 'PASS' if worst >= 1 else 'FAIL'})")
     return out
 
 

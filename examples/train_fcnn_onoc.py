@@ -27,6 +27,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--kernel", default=None,
+                    choices=["ref", "pallas", "pallas_interpret"],
+                    help="force the fcnn_layer dispatch mode (default: "
+                         "fused Pallas fwd+bwd on TPU, jnp oracle elsewhere)")
     args = ap.parse_args()
 
     # reduced NN1 (784-1000-500-10 -> 784-256-128-10) so CPU runs fast
@@ -50,7 +54,9 @@ def main() -> None:
 
     @jax.jit
     def step(params, opt_state, batch, i):
-        loss, grads = jax.value_and_grad(fcnn.loss_fn)(params, batch)
+        loss, grads = jax.value_and_grad(
+            lambda p, b: fcnn.loss_fn(p, b, kernel_mode=args.kernel)
+        )(params, batch)
         params, opt_state = opt.update(grads, opt_state, params, i)
         return params, opt_state, loss
 

@@ -167,16 +167,93 @@ class ENoCBackend:
         period: int,
         mapping: Mapping,
     ) -> TransitionTraffic:
+        """Vectorized XY link-load accumulation.
+
+        Each sender unicasts its payload to every receiver (no multicast).
+        Traffic model: per-link serialized occupancy with XY routing; the
+        transition completes when the most-loaded link drains, plus one
+        max-path latency to account for the pipeline fill.
+
+        A pair (s, r) traverses the eastbound link (x, y)->(x+1, y) iff
+        s is in row y with sx <= x and rx >= x+1 (X-first routing), and the
+        northbound link (c, y)->(c, y+1) iff rx == c with ry >= y+1 and
+        sy <= y — sender/receiver conditions are independent, so every
+        directed link's pair count is a product of two cumulative counts.
+        That turns the O(m_i² · hops) Python loop into O(side²) numpy.
+        Self-pairs (r == s) can satisfy none of the segment conditions and
+        traverse zero hops, so no exclusion term is needed.  Link loads and
+        hop_bytes are integer-valued, so count × payload is bit-identical
+        to the loop's repeated addition.
+        """
         senders = mapping.window(period)
         receivers = mapping.window(period + 1)
         m_i = len(senders)
         payload = _transition_payload_bytes(workload, cfg, period, m_i)
         side = self._grid(mapping.m)
 
-        # Each sender unicasts its payload to every receiver (no multicast).
-        # Traffic model: per-link serialized occupancy with XY routing; the
-        # transition completes when the most-loaded link drains, plus one
-        # max-path latency to account for the pipeline fill.
+        s = np.asarray(senders, dtype=np.int64)
+        r = np.asarray(receivers, dtype=np.int64)
+        sx, sy = s % side, s // side
+        rx, ry = r % side, r // side
+
+        hops = np.abs(sx[:, None] - rx[None, :]) + np.abs(
+            sy[:, None] - ry[None, :])
+        hop_bytes = payload * float(hops.sum())
+        max_hops = int(hops.max()) if hops.size else 0
+
+        # per-cell occupancy counts
+        s_grid = np.zeros((side, side), dtype=np.int64)   # [y, x] senders
+        np.add.at(s_grid, (sy, sx), 1)
+        r_grid = np.zeros((side, side), dtype=np.int64)   # [x, y] receivers
+        np.add.at(r_grid, (rx, ry), 1)
+        s_per_row = s_grid.sum(axis=1)                    # [y]
+        r_per_col = r_grid.sum(axis=1)                    # [x]
+
+        max_pairs = 0
+        if side > 1:
+            # horizontal links in row y at x (east: x->x+1, west: x+1->x)
+            s_le_x = np.cumsum(s_grid, axis=1)            # sx <= x in row y
+            s_ge_x = s_grid[:, ::-1].cumsum(axis=1)[:, ::-1]
+            r_le_c = np.cumsum(r_per_col)                 # rx <= x (any row)
+            r_ge_c = r_per_col[::-1].cumsum()[::-1]
+            east = s_le_x[:, :-1] * r_ge_c[None, 1:]
+            west = s_ge_x[:, 1:] * r_le_c[None, :-1]
+            # vertical links in column c at y (north: y->y+1, south: y+1->y)
+            r_le_y = np.cumsum(r_grid, axis=1)            # rx==c, ry <= y
+            r_ge_y = r_grid[:, ::-1].cumsum(axis=1)[:, ::-1]
+            s_le_row = np.cumsum(s_per_row)               # sy <= y (any col)
+            s_ge_row = s_per_row[::-1].cumsum()[::-1]
+            north = r_ge_y[:, 1:] * s_le_row[None, :-1]
+            south = r_le_y[:, :-1] * s_ge_row[None, 1:]
+            max_pairs = max(int(east.max()), int(west.max()),
+                            int(north.max()), int(south.max()))
+
+        bw = self.enoc.link_bandwidth_Bps()
+        drain = (max_pairs * payload / bw) if max_pairs else 0.0
+        latency = max_hops * self.enoc.hop_cycles / self.enoc.clock_hz
+        return TransitionTraffic(
+            period=period, senders=senders, receivers=receivers,
+            bytes_per_sender=payload, comm_s=drain + latency,
+            hop_bytes=hop_bytes,
+        )
+
+    def transition_time_reference(
+        self,
+        workload: FCNNWorkload,
+        cfg: ONoCConfig,
+        period: int,
+        mapping: Mapping,
+    ) -> TransitionTraffic:
+        """Original per-pair Python-loop implementation — kept as the oracle
+        the vectorized ``transition_time`` is validated against
+        (tests/test_simulator_energy.py asserts bit-identical comm_s and
+        hop_bytes)."""
+        senders = mapping.window(period)
+        receivers = mapping.window(period + 1)
+        m_i = len(senders)
+        payload = _transition_payload_bytes(workload, cfg, period, m_i)
+        side = self._grid(mapping.m)
+
         link_load: dict[tuple[int, int, int, int], float] = {}
         hop_bytes = 0.0
         max_hops = 0

@@ -1,10 +1,42 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-Dispatch policy: on a TPU backend the Pallas kernel is used (compiled);
-anywhere else the pure-jnp oracle from ref.py runs — bit-compatible
-semantics, so models and tests can call these unconditionally.  Tests that
-validate the kernels themselves force the Pallas path with
-``force="pallas_interpret"``.
+Dispatch policy
+---------------
+Every wrapper resolves a *mode* per call:
+
+  * ``force=None`` (default) — ``"pallas"`` on a TPU backend (compiled
+    kernels), ``"ref"`` anywhere else (the pure-jnp oracles from ref.py,
+    bit-compatible semantics).  Models and launch code therefore call these
+    unconditionally; CPU tests and lowering-only dry-runs transparently get
+    the oracle path.
+  * ``force="ref"`` — the oracle, always.  Differentiable by ordinary JAX
+    autodiff; this is the ground truth the kernels are validated against.
+  * ``force="pallas"`` — the compiled TPU kernel regardless of backend
+    (will fail off-TPU; used by hardware benchmarks).
+  * ``force="pallas_interpret"`` — the Pallas kernels in interpreter mode:
+    same kernel code, runs on CPU.  Used by tests/test_kernels.py to
+    validate both values and gradients without hardware.
+
+fcnn_layer: fused forward AND backward
+--------------------------------------
+``fcnn_layer`` is the production hot path of the paper's per-period FCNN
+loop, so its Pallas modes carry a ``jax.custom_vjp``: the forward saves
+(x, w, b, y) — b only to dtype the db cotangent, never a pre-activation
+Z — and the backward runs two fused kernels —
+
+  * dgrad: dX = (dY ⊙ A'(Y)) @ Wᵀ, activation derivative fused into the
+    GEMM prologue (the pre-activation gradient dZ never reaches HBM);
+  * wgrad: dW = Xᵀ @ dZ and db = Σ_rows dZ in one pass, recomputing the
+    cheap element-wise dZ instead of materializing it.
+
+so ``jax.grad`` through a Pallas-dispatched ``fcnn_layer`` stays fused end
+to end, while ``force="ref"`` keeps plain autodiff of the oracle.  Both
+paths agree to fp32 tolerance (see tests/test_kernels.py).
+
+Block sizes & padding: kernels auto-select MXU-aligned blocks and
+zero-pad edge tiles, so non-128-divisible shapes (784, 10, …) are
+accepted in every mode; explicit ``block_m/n/k`` overrides act as
+preferred sizes rather than hard divisibility requirements.
 """
 
 from __future__ import annotations
@@ -12,10 +44,13 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.fcnn_layer import fcnn_layer as _fcnn_pallas
+from repro.kernels.fcnn_layer import (
+    fcnn_layer as _fcnn_pallas,
+    fcnn_layer_dgrad as _fcnn_dgrad_pallas,
+    fcnn_layer_wgrad as _fcnn_wgrad_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_chunk as _ssd_pallas
 
@@ -32,13 +67,39 @@ def _mode(force: str | None) -> str:
     return "pallas" if _on_tpu() else "ref"
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_fcnn(activation: str, interpret: bool, blocks: tuple):
+    """custom_vjp-wrapped fused forward/backward for one static config."""
+    bl = dict(blocks)
+
+    @jax.custom_vjp
+    def f(x, w, b):
+        return _fcnn_pallas(x, w, b, activation, interpret=interpret, **bl)
+
+    def fwd(x, w, b):
+        y = _fcnn_pallas(x, w, b, activation, interpret=interpret, **bl)
+        return y, (x, w, b, y)
+
+    def bwd(res, dy):
+        x, w, b, y = res
+        dx = _fcnn_dgrad_pallas(dy, y, w, activation,
+                                interpret=interpret, **bl)
+        dw, db = _fcnn_wgrad_pallas(x, dy, y, activation,
+                                    interpret=interpret, **bl)
+        return (dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 def fcnn_layer(x, w, b, activation: str = "sigmoid", *,
                force: str | None = None, **blocks):
     mode = _mode(force)
     if mode == "ref":
         return _ref.fcnn_layer_ref(x, w, b, activation)
     interp = mode == "pallas_interpret"
-    return _fcnn_pallas(x, w, b, activation, interpret=interp, **blocks)
+    fused = _fused_fcnn(activation, interp, tuple(sorted(blocks.items())))
+    return fused(x, w, b)
 
 
 def flash_attention(q, k, v, causal: bool = True, *,
@@ -53,7 +114,6 @@ def flash_attention(q, k, v, causal: bool = True, *,
 def ssd_chunk(x, dt_a, b, c, *, force: str | None = None, **blocks):
     mode = _mode(force)
     if mode == "ref":
-        ys, sts, decs = [], [], []
         f = jax.vmap(_ref.ssd_chunk_ref)
         return f(x, dt_a, b, c)
     interp = mode == "pallas_interpret"

@@ -12,7 +12,14 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["fcnn_layer_ref", "flash_attention_ref", "ssd_chunk_ref"]
+__all__ = [
+    "act_deriv_from_output",
+    "fcnn_layer_ref",
+    "fcnn_layer_dgrad_ref",
+    "fcnn_layer_wgrad_ref",
+    "flash_attention_ref",
+    "ssd_chunk_ref",
+]
 
 
 def fcnn_layer_ref(x: jax.Array, w: jax.Array, b: jax.Array,
@@ -30,6 +37,48 @@ def fcnn_layer_ref(x: jax.Array, w: jax.Array, b: jax.Array,
     else:
         raise ValueError(f"unknown activation {activation!r}")
     return z.astype(x.dtype)
+
+
+def act_deriv_from_output(y: jax.Array, activation: str) -> jax.Array:
+    """A'(z) expressed via the activation OUTPUT y (fp32 in, fp32 out).
+
+    Shared by the oracles below AND the fused Pallas dgrad/wgrad kernels
+    (pure jnp, so it traces inside a kernel body) — one table, so a new
+    activation cannot silently diverge between kernel and ground truth.
+    """
+    if activation == "sigmoid":
+        return y * (1.0 - y)
+    if activation == "relu":
+        return (y > 0).astype(jnp.float32)
+    if activation == "tanh":
+        return 1.0 - y * y
+    if activation == "none":
+        return jnp.ones_like(y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _dz(dy: jax.Array, y: jax.Array, activation: str) -> jax.Array:
+    return dy.astype(jnp.float32) * act_deriv_from_output(
+        y.astype(jnp.float32), activation)
+
+
+def fcnn_layer_dgrad_ref(dy: jax.Array, y: jax.Array, w: jax.Array,
+                         activation: str = "sigmoid") -> jax.Array:
+    """dX = (dY ⊙ A'(Y)) @ Wᵀ — oracle for the fused dgrad kernel."""
+    dz = _dz(dy, y, activation)
+    dx = jnp.dot(dz, w.astype(jnp.float32).T,
+                 preferred_element_type=jnp.float32)
+    return dx.astype(dy.dtype)
+
+
+def fcnn_layer_wgrad_ref(x: jax.Array, dy: jax.Array, y: jax.Array,
+                         activation: str = "sigmoid"):
+    """(dW, db) = (Xᵀ @ dZ, Σ_rows dZ) — oracle for the fused wgrad kernel."""
+    dz = _dz(dy, y, activation)
+    dw = jnp.dot(x.astype(jnp.float32).T, dz,
+                 preferred_element_type=jnp.float32)
+    db = jnp.sum(dz, axis=0)
+    return dw.astype(x.dtype), db.astype(dy.dtype)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -35,7 +35,8 @@ from repro.models import fcnn  # noqa: E402
 from repro.optim import adam  # noqa: E402
 
 
-def lower_nn(name: str, batch: int, multi_pod: bool, lambda_max: int = 64):
+def lower_nn(name: str, batch: int, multi_pod: bool, lambda_max: int = 64,
+             kernel_mode: str | None = None):
     mesh = make_production_mesh(multi_pod=multi_pod)
     w = workload(name, batch)
     plan = plan_fcnn(w, onoc_config(lambda_max), dict(mesh.shape),
@@ -59,7 +60,9 @@ def lower_nn(name: str, batch: int, multi_pod: bool, lambda_max: int = 64):
             "y": NamedSharding(mesh, P(data_axes))}
 
     def step(state, batch_):
-        loss, grads = jax.value_and_grad(fcnn.loss_fn)(state["params"], batch_)
+        loss, grads = jax.value_and_grad(
+            lambda p, b: fcnn.loss_fn(p, b, kernel_mode=kernel_mode)
+        )(state["params"], batch_)
         params, opt_state = opt.update(grads, state["opt"], state["params"],
                                        state["step"])
         return ({"params": params, "opt": opt_state,
@@ -85,6 +88,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--kernel", default=None,
+                    choices=["ref", "pallas", "pallas_interpret"],
+                    help="force the fcnn_layer dispatch mode")
     ap.add_argument("--out", default="results/dryrun_fcnn.json")
     args = ap.parse_args()
 
@@ -98,7 +104,8 @@ def main() -> None:
         print(f"[run] {key}", flush=True)
         t0 = time.time()
         try:
-            lowered, plan, mesh = lower_nn(name, args.batch, args.multipod)
+            lowered, plan, mesh = lower_nn(name, args.batch, args.multipod,
+                                           kernel_mode=args.kernel)
             compiled = lowered.compile()
             m = _metrics_of(compiled)
             mem = compiled.memory_analysis()

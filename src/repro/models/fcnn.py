@@ -14,6 +14,14 @@ paper's "senders in Period i become receivers in Period 2l-i+1"
 
 Heterogeneous layer shapes mean this model is NOT scanned — exactly like
 the paper, each period is its own program phase.
+
+Every period dispatches through ``kernels.ops.fcnn_layer``: on TPU that is
+the fused Pallas forward (bias+activation in the GEMM epilogue) with a
+``jax.custom_vjp`` backward running the fused dgrad/wgrad kernels, so both
+passes of the hot loop avoid an HBM round-trip of the (B, n_i) activation
+tensor; everywhere else it is the bit-compatible jnp oracle, differentiable
+by ordinary autodiff.  ``kernel_mode`` forces a dispatch mode (``"ref"`` /
+``"pallas"`` / ``"pallas_interpret"``) for tests and benchmarks.
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.parallel.sharding import shard_constraint
 
 Params = dict[str, Any]
@@ -59,25 +68,24 @@ def param_axes(layer_sizes: Sequence[int],
     return {"layers": layers}
 
 
-def forward(params: Params, x: jax.Array) -> jax.Array:
+def forward(params: Params, x: jax.Array,
+            kernel_mode: str | None = None) -> jax.Array:
     """x: (B, n_0) -> logits (B, n_l).  Period i = one loop iteration."""
     h = x
     n = len(params["layers"])
     for i, lp in enumerate(params["layers"]):
-        z = jnp.einsum("bi,io->bo", h, lp["w"],
-                       preferred_element_type=jnp.float32) + lp["b"].astype(jnp.float32)
+        act = "sigmoid" if i < n - 1 else "none"
+        h = ops.fcnn_layer(h, lp["w"], lp["b"], act, force=kernel_mode)
         if i < n - 1:
-            h = jax.nn.sigmoid(z).astype(x.dtype)
             # the paper's inter-period broadcast: outputs leave this
             # period's cores for the next period's cores
             h = shard_constraint(h, ("activation_batch", "activation_mlp"))
-        else:
-            h = z  # output layer: softmax folded into the loss
     return h
 
 
-def loss_fn(params: Params, batch: Params) -> jax.Array:
-    logits = forward(params, batch["x"])
+def loss_fn(params: Params, batch: Params,
+            kernel_mode: str | None = None) -> jax.Array:
+    logits = forward(params, batch["x"], kernel_mode=kernel_mode)
     labels = batch["y"]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]

@@ -1,0 +1,153 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` used when the real
+package is not installed (the CI image bakes in only the runtime deps).
+
+conftest.py registers this module in ``sys.modules`` as ``hypothesis`` /
+``hypothesis.strategies`` *only* when the real library is absent, so the
+property-test modules (``from hypothesis import given, strategies as st``)
+keep collecting and running instead of dying with ModuleNotFoundError.
+
+Only the API surface this repo's tests use is implemented:
+
+  st.integers(a, b) . st.sampled_from(xs) . st.lists(s, min_size, max_size)
+  st.builds(f, **kw) . st.floats(a, b) . st.booleans() . st.tuples(*ss)
+  st.randoms() . strategy.map(f) . @given(...) . settings profiles
+
+Semantics: ``@given`` reruns the test ``MAX_EXAMPLES`` times with values
+drawn from a per-test seeded ``random.Random`` — deterministic across runs
+(seeded from the test name), no shrinking, no database.  Install the real
+``hypothesis`` (see requirements-dev.txt) for full property testing.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def builds(target, *arg_strategies, **kw_strategies):
+    def draw(rng):
+        args = [s.draw(rng) for s in arg_strategies]
+        kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+        return target(*args, **kwargs)
+    return SearchStrategy(draw)
+
+
+def randoms(**_kw):
+    return SearchStrategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies):
+    return SearchStrategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].draw(rng))
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(test):
+        @functools.wraps(test)
+        def wrapper(*args, **kwargs):
+            del args, kwargs  # drawn values only; no pytest fixtures
+            seed = zlib.adler32(test.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(settings._max_examples):
+                drawn = [s.draw(rng) for s in strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    test(*drawn, **drawn_kw)
+                except _Unsatisfied:
+                    continue
+        # Hide the wrapped test's parameters from pytest's fixture
+        # resolution — all arguments are drawn from the strategies.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate
+
+
+class settings:
+    """Profile registry — only max_examples/deadline are honoured."""
+
+    _profiles: dict[str, dict] = {}
+    _max_examples = MAX_EXAMPLES
+
+    def __init__(self, max_examples=MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, test):  # used as @settings(...) decorator
+        return test
+
+    @classmethod
+    def register_profile(cls, name, max_examples=MAX_EXAMPLES, **kw):
+        cls._profiles[name] = {"max_examples": max_examples, **kw}
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._max_examples = cls._profiles.get(name, {}).get(
+            "max_examples", MAX_EXAMPLES)
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+HealthCheck = type("HealthCheck", (), {"all": staticmethod(lambda: [])})

@@ -1,5 +1,6 @@
 """Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
-swept over shapes and dtypes."""
+swept over shapes and dtypes — forward values AND (for the fused fcnn
+kernel) gradients through the custom VJP."""
 
 import jax
 import jax.numpy as jnp
@@ -8,6 +9,11 @@ import pytest
 
 from repro.kernels import ops
 from repro.kernels import ref as R
+from repro.kernels.fcnn_layer import (
+    fcnn_layer_dgrad,
+    fcnn_layer_wgrad,
+    select_blocks,
+)
 
 RNG = np.random.default_rng(7)
 
@@ -33,6 +39,106 @@ def test_fcnn_layer_kernel(m, k, n, bm, bn, bk, dtype, act):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(refv, np.float32),
                                rtol=tol, atol=tol)
+
+
+# The paper's NN benchmark layer shapes are NOT 128-divisible (784 inputs,
+# 10 output classes); the kernel must pad edge tiles instead of raising.
+@pytest.mark.parametrize("m,k,n", [
+    (32, 784, 1000),    # NN1 layer 1
+    (32, 500, 10),      # NN1 output layer
+    (100, 64, 64),      # non-divisible batch
+    (8, 1024, 4000),    # NN5/NN6 wide layer
+    (7, 13, 5),         # everything tiny and ragged
+])
+@pytest.mark.parametrize("act", ["sigmoid", "relu", "tanh", "none"])
+def test_fcnn_layer_kernel_nonaligned(m, k, n, act):
+    x = _arr((m, k), jnp.float32)
+    w = _arr((k, n), jnp.float32, 0.05)
+    b = _arr((n,), jnp.float32)
+    out = ops.fcnn_layer(x, w, b, act, force="pallas_interpret")
+    refv = R.fcnn_layer_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refv),
+                               rtol=5e-6, atol=5e-6)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (32, 784, 1000),    # NN1 layer 1 (non-128-divisible K)
+    (32, 1000, 500),
+    (32, 500, 10),      # 10-class output layer
+    (16, 1024, 4000),   # NN5/NN6 wide layer
+])
+@pytest.mark.parametrize("act", ["sigmoid", "relu", "tanh", "none"])
+def test_fcnn_layer_grad_matches_ref(m, k, n, act):
+    """jax.grad through the Pallas custom-VJP dispatch == autodiff of the
+    oracle, for x, w and b (acceptance criterion: 1e-5 fp32)."""
+    x = _arr((m, k), jnp.float32)
+    w = _arr((k, n), jnp.float32, 0.05)
+    b = _arr((n,), jnp.float32)
+    t = _arr((m, n), jnp.float32)
+
+    def loss(p, mode):
+        y = ops.fcnn_layer(p["x"], p["w"], p["b"], act, force=mode)
+        return jnp.mean((y.astype(jnp.float32) - t) ** 2)
+
+    g_pallas = jax.grad(lambda p: loss(p, "pallas_interpret"))(
+        {"x": x, "w": w, "b": b})
+    g_ref = jax.grad(lambda p: loss(p, "ref"))({"x": x, "w": w, "b": b})
+    for name in ("x", "w", "b"):
+        np.testing.assert_allclose(
+            np.asarray(g_pallas[name]), np.asarray(g_ref[name]),
+            rtol=1e-5, atol=1e-5, err_msg=f"d{name} act={act}")
+
+
+@pytest.mark.parametrize("act", ["sigmoid", "relu", "tanh", "none"])
+def test_fcnn_backward_kernels_match_oracles(act):
+    """The dgrad/wgrad Pallas kernels against their ref.py oracles."""
+    m, k, n = 48, 200, 75
+    x = _arr((m, k), jnp.float32)
+    w = _arr((k, n), jnp.float32, 0.05)
+    b = _arr((n,), jnp.float32)
+    dy = _arr((m, n), jnp.float32)
+    y = R.fcnn_layer_ref(x, w, b, act)
+
+    dx = fcnn_layer_dgrad(dy, y, w, act, interpret=True)
+    dx_ref = R.fcnn_layer_dgrad_ref(dy, y, w, act)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref),
+                               rtol=5e-6, atol=5e-6)
+
+    dw, db = fcnn_layer_wgrad(x, dy, y, act, interpret=True)
+    dw_ref, db_ref = R.fcnn_layer_wgrad_ref(x, dy, y, act)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref),
+                               rtol=5e-6, atol=5e-6)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_ref),
+                               rtol=5e-6, atol=5e-6)
+
+
+def test_fcnn_grad_through_model_loss():
+    """End-to-end: grad of the FCNN cross-entropy loss, fused vs ref."""
+    from repro.models import fcnn
+
+    sizes = [784, 64, 10]   # non-aligned input layer
+    params = fcnn.init(jax.random.PRNGKey(0), sizes)
+    batch = {
+        "x": _arr((16, sizes[0]), jnp.float32),
+        "y": jnp.asarray(RNG.integers(0, sizes[-1], size=16), jnp.int32),
+    }
+    g_pallas = jax.grad(
+        lambda p: fcnn.loss_fn(p, batch, kernel_mode="pallas_interpret")
+    )(params)
+    g_ref = jax.grad(
+        lambda p: fcnn.loss_fn(p, batch, kernel_mode="ref"))(params)
+    flat_p, _ = jax.tree_util.tree_flatten(g_pallas)
+    flat_r, _ = jax.tree_util.tree_flatten(g_ref)
+    for a, b_ in zip(flat_p, flat_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_select_blocks_minimizes_padding():
+    (bm, bn, bk), (mp, np_, kp) = select_blocks(784, 784, 10)
+    assert mp % bm == 0 and np_ % bn == 0 and kp % bk == 0
+    assert mp - 784 < bm and kp - 784 < 128 + bk  # minimal edge padding
+    assert np_ == 128  # 10 -> one lane tile
 
 
 @pytest.mark.parametrize("b,h,s,d,bq", [
@@ -79,7 +185,17 @@ def test_ops_dispatch_cpu_uses_ref():
     np.testing.assert_allclose(out, R.fcnn_layer_ref(x, w, b), rtol=1e-6)
 
 
-def test_kernel_block_divisibility_error():
+def test_kernel_nondivisible_blocks_pad_instead_of_raising():
+    """Explicit block overrides that don't divide the shape are treated as
+    preferred sizes: the kernel pads edge tiles rather than raising."""
     x, w, b = _arr((100, 64), jnp.float32), _arr((64, 64), jnp.float32), _arr((64,), jnp.float32)
+    out = ops.fcnn_layer(x, w, b, force="pallas_interpret", block_m=64)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(R.fcnn_layer_ref(x, w, b)),
+                               rtol=5e-6, atol=5e-6)
+
+
+def test_kernel_unknown_activation_raises():
+    x, w, b = _arr((8, 8), jnp.float32), _arr((8, 8), jnp.float32), _arr((8,), jnp.float32)
     with pytest.raises(ValueError):
-        ops.fcnn_layer(x, w, b, force="pallas_interpret", block_m=64)
+        ops.fcnn_layer(x, w, b, "swish", force="pallas_interpret")

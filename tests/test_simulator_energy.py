@@ -94,6 +94,39 @@ def test_enoc_energy_grows_with_hops():
     assert es[1] > es[0]
 
 
+@given(sizes_st, st.sampled_from([40, 150]),
+       st.sampled_from(list(MappingStrategy)))
+def test_enoc_vectorized_matches_loop(sizes, fixed, strategy):
+    """The numpy link-load accumulation must be bit-identical to the
+    original per-pair Python loop (comm_s AND hop_bytes)."""
+    w = FCNNWorkload(sizes, batch_size=8)
+    cfg = ONoCConfig(lambda_max=64)
+    cores = fnp_cores(w, cfg, fixed)
+    mp = map_cores(w, cfg, strategy, cores)
+    be = ENoCBackend()
+    for i in range(1, 2 * w.l):
+        if i in (w.l, 2 * w.l):
+            continue
+        fast = be.transition_time(w, cfg, i, mp)
+        ref = be.transition_time_reference(w, cfg, i, mp)
+        assert fast.comm_s == ref.comm_s
+        assert fast.hop_bytes == ref.hop_bytes
+        assert fast.senders == ref.senders
+        assert fast.receivers == ref.receivers
+
+
+def test_enoc_vectorized_single_core_window():
+    """Degenerate windows (1 sender == 1 receiver) produce zero traffic."""
+    w = FCNNWorkload([32, 16, 10], batch_size=2)
+    cfg = ONoCConfig(lambda_max=8)
+    mp = map_cores(w, cfg, "fm", [1, 1])
+    be = ENoCBackend()
+    tr = be.transition_time(w, cfg, 1, mp)
+    ref = be.transition_time_reference(w, cfg, 1, mp)
+    assert tr.comm_s == ref.comm_s
+    assert tr.hop_bytes == ref.hop_bytes
+
+
 def test_energy_breakdown_positive():
     w = FCNNWorkload([784, 1000, 500, 10], batch_size=8)
     cfg = ONoCConfig(lambda_max=64)
