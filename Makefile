@@ -1,8 +1,10 @@
 # Developer gate — the same checks the PR driver runs.
 #
 #   make verify       tier-1 pytest suite
-#   make bench-smoke  one fast benchmark (table7) as a sanity smoke
+#   make bench-smoke  fast sanity smoke (table7 + the softmax/xent
+#                     microbench, so the fused-loss path is exercised)
 #   make bench-json   full benchmark sweep -> BENCH_fcnn.json
+#                     (includes softmax_xent_microbench by default)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
@@ -14,6 +16,7 @@ verify:
 
 bench-smoke:
 	$(PY) -m benchmarks.run --only table7_prediction
+	$(PY) -m benchmarks.run --only softmax_xent_microbench
 
 bench-json:
 	$(PY) -m benchmarks.run --json BENCH_fcnn.json

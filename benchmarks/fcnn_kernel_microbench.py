@@ -88,6 +88,52 @@ def run() -> list[dict]:
     return rows
 
 
+# ---------------------------------------------------- fused softmax/xent
+
+# Output-period shapes: the paper's 10-class layers at both batch sizes,
+# plus a wide-vocab row so the class-tile streaming actually loops.
+XENT_SHAPES = (
+    ("nn1_output_b64", 64, 10),
+    ("nn1_output_b128", 128, 10),
+    ("wide_vocab_b128", 128, 4096),
+)
+
+
+def _jnp_xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.mean(-jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0])
+
+
+def run_softmax_xent() -> list[dict]:
+    """Fused softmax/cross-entropy dispatch vs plain jnp, fwd and fwd+bwd."""
+    rng = np.random.default_rng(13)
+    rows = []
+    for name, b, n in XENT_SHAPES:
+        logits = jnp.asarray(rng.normal(size=(b, n)) * 2, jnp.float32)
+        labels = jnp.asarray(rng.integers(0, n, size=b), jnp.int32)
+
+        fused_fwd = jax.jit(lambda x, y: ops.softmax_xent(x, y))
+        jnp_fwd = jax.jit(_jnp_xent)
+        fused_fwdbwd = jax.jit(jax.grad(lambda x, y: ops.softmax_xent(x, y)))
+        jnp_fwdbwd = jax.jit(jax.grad(_jnp_xent))
+
+        fwd_fused_s = _time(fused_fwd, logits, labels)
+        fwd_jnp_s = _time(jnp_fwd, logits, labels)
+        bwd_fused_s = _time(fused_fwdbwd, logits, labels)
+        bwd_jnp_s = _time(jnp_fwdbwd, logits, labels)
+        rows.append({
+            "case": name, "b": b, "n": n,
+            "backend": jax.default_backend(),
+            "fwd_fused_us": 1e6 * fwd_fused_s,
+            "fwd_jnp_us": 1e6 * fwd_jnp_s,
+            "fwdbwd_fused_us": 1e6 * bwd_fused_s,
+            "fwdbwd_jnp_us": 1e6 * bwd_jnp_s,
+            "fwd_speedup": fwd_jnp_s / max(fwd_fused_s, 1e-12),
+            "fwdbwd_speedup": bwd_jnp_s / max(bwd_fused_s, 1e-12),
+        })
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
+    for r in run() + run_softmax_xent():
         print(r)

@@ -9,7 +9,9 @@ Prints one CSV block per benchmark: ``benchmark,wall_us,key=value,...``
 ``BENCH_fcnn.json``) with per-benchmark wall time, all result rows and the
 reproduction checks, so the perf trajectory is tracked across PRs — the
 ``fcnn_kernel_microbench`` entry times the fused fwd / fwd+bwd kernel
-dispatch against a plain einsum implementation.
+dispatch against a plain einsum implementation, and
+``softmax_xent_microbench`` does the same for the fused output-period
+loss against the plain jnp log-softmax + NLL.
 """
 
 from __future__ import annotations
@@ -41,6 +43,7 @@ BENCHMARKS = {
     "strategy_analysis": strategy_analysis.run,
     "roofline_report": roofline_report.run,
     "fcnn_kernel_microbench": fcnn_kernel_microbench.run,
+    "softmax_xent_microbench": fcnn_kernel_microbench.run_softmax_xent,
 }
 
 
@@ -148,12 +151,19 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
         out.append(f"check,thm2,FM hotspot >= ORRM hotspot -> "
                    f"{'PASS' if ok else 'FAIL'}")
     if name == "fcnn_kernel_microbench":
-        backend = rows[0]["backend"]
-        worst = min(r["fwdbwd_speedup"] for r in rows)
-        out.append(f"check,kernels,fused fwd+bwd vs einsum on {backend}: "
-                   f"min speedup {worst:.2f}x "
-                   f"({'informational off-TPU' if backend != 'tpu' else 'PASS' if worst >= 1 else 'FAIL'})")
+        out.append(_microbench_check(rows, "fused fwd+bwd vs einsum"))
+    if name == "softmax_xent_microbench":
+        out.append(_microbench_check(rows, "fused softmax/xent fwd+bwd vs jnp"))
     return out
+
+
+def _microbench_check(rows: list[dict], label: str) -> str:
+    backend = rows[0]["backend"]
+    worst = min(r["fwdbwd_speedup"] for r in rows)
+    verdict = ("informational off-TPU" if backend != "tpu"
+               else "PASS" if worst >= 1 else "FAIL")
+    return (f"check,kernels,{label} on {backend}: "
+            f"min speedup {worst:.2f}x ({verdict})")
 
 
 if __name__ == "__main__":

@@ -67,13 +67,15 @@ def main() -> None:
             params, opt_state, loss = step(params, opt_state, batch, i)
             if i % 50 == 0 or i == args.steps - 1:
                 acc = fcnn.accuracy(params, jnp.asarray(x[:1024]),
-                                    jnp.asarray(y[:1024]))
+                                    jnp.asarray(y[:1024]),
+                                    kernel_mode=args.kernel)
                 print(f"step {i:4d}  loss {float(loss):.4f}  "
                       f"acc {float(acc):.3f}")
     dt = time.time() - t0
     print(f"\n{args.steps} steps in {dt:.1f}s "
           f"({1e3 * dt / args.steps:.1f} ms/step)")
-    final_acc = float(fcnn.accuracy(params, jnp.asarray(x), jnp.asarray(y)))
+    final_acc = float(fcnn.accuracy(params, jnp.asarray(x), jnp.asarray(y),
+                                    kernel_mode=args.kernel))
     print(f"final train accuracy: {final_acc:.3f}")
     assert final_acc > 0.8, "training failed to learn"
 

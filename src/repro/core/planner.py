@@ -19,6 +19,7 @@ factorable degrees; DESIGN.md §2 records this assumption change).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Sequence
 
@@ -62,22 +63,22 @@ class FCNNPlan:
 
 
 def feasible_degrees(mesh_axes: dict[str, int]) -> dict[int, tuple[str, ...]]:
-    """All sharding degrees expressible as products of mesh axes.
+    """All sharding degrees expressible as a product of ANY subset of mesh
+    axes — not just contiguous runs of the preference order.  A mesh
+    {model: 2, data: 3, pod: 2} can realize degree 4 as model×pod; the old
+    prefix/suffix enumeration missed it and silently snapped plans to a
+    worse degree.
 
-    Axis order preference: "model" first (highest-bandwidth contiguous
-    ring), then "data", then "pod"."""
+    When several subsets yield the same degree, the recorded axes prefer
+    fewer axes, breaking ties by the canonical order: "model" first
+    (highest-bandwidth contiguous ring), then "data", then "pod"."""
     order = [a for a in ("model", "data", "pod") if a in mesh_axes]
+    order += [a for a in mesh_axes if a not in order]
     out: dict[int, tuple[str, ...]] = {1: ()}
-    # products of prefixes and single axes
-    for i in range(len(order)):
-        prod, axes = 1, []
-        for a in order[i:]:
-            prod *= mesh_axes[a]
-            axes.append(a)
-            if prod not in out:
-                out[prod] = tuple(axes)
-    for a in order:  # single axes too
-        out.setdefault(mesh_axes[a], (a,))
+    for size in range(1, len(order) + 1):
+        for axes in itertools.combinations(order, size):
+            prod = math.prod(mesh_axes[a] for a in axes)
+            out.setdefault(prod, axes)
     return out
 
 

@@ -4,4 +4,9 @@ Each kernel ships with a pure-jnp oracle (ref.py) and a jit'd public
 wrapper (ops.py) that falls back to the oracle off-TPU.
 """
 
-from repro.kernels.ops import fcnn_layer, flash_attention, ssd_chunk  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    fcnn_layer,
+    flash_attention,
+    softmax_xent,
+    ssd_chunk,
+)

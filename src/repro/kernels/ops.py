@@ -33,6 +33,20 @@ so ``jax.grad`` through a Pallas-dispatched ``fcnn_layer`` stays fused end
 to end, while ``force="ref"`` keeps plain autodiff of the oracle.  Both
 paths agree to fp32 tolerance (see tests/test_kernels.py).
 
+softmax_xent: the fused output period
+-------------------------------------
+``softmax_xent`` closes the loop on the 2l-period pipeline: the loss
+itself.  Its Pallas modes also carry a ``jax.custom_vjp`` —
+
+  * forward: one online-softmax sweep over class tiles returning per-row
+    (nll, lse); the loss is the mean of nll, and lse is the ONLY tensor
+    residual beyond the primals (two (B,) vectors — probabilities and
+    log-probs never reach HBM);
+  * backward: dlogits = (softmax − onehot) · ḡ/B recomputed from lse in
+    a single fused pass.
+
+Labels are integer class ids and get a ``None`` cotangent.
+
 Block sizes & padding: kernels auto-select MXU-aligned blocks and
 zero-pad edge tiles, so non-128-divisible shapes (784, 10, …) are
 accepted in every mode; explicit ``block_m/n/k`` overrides act as
@@ -44,6 +58,7 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.fcnn_layer import (
@@ -52,9 +67,13 @@ from repro.kernels.fcnn_layer import (
     fcnn_layer_wgrad as _fcnn_wgrad_pallas,
 )
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.softmax_xent import (
+    softmax_xent_dlogits as _xent_dlogits_pallas,
+    softmax_xent_fwd as _xent_fwd_pallas,
+)
 from repro.kernels.ssd_scan import ssd_chunk as _ssd_pallas
 
-__all__ = ["fcnn_layer", "flash_attention", "ssd_chunk"]
+__all__ = ["fcnn_layer", "softmax_xent", "flash_attention", "ssd_chunk"]
 
 
 def _on_tpu() -> bool:
@@ -100,6 +119,44 @@ def fcnn_layer(x, w, b, activation: str = "sigmoid", *,
     interp = mode == "pallas_interpret"
     fused = _fused_fcnn(activation, interp, tuple(sorted(blocks.items())))
     return fused(x, w, b)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_xent(interpret: bool, blocks: tuple):
+    """custom_vjp-wrapped fused softmax/cross-entropy for one config."""
+    bl = dict(blocks)
+
+    @jax.custom_vjp
+    def f(logits, labels):
+        nll, _ = _xent_fwd_pallas(logits, labels, interpret=interpret, **bl)
+        return jnp.mean(nll)
+
+    def fwd(logits, labels):
+        nll, lse = _xent_fwd_pallas(logits, labels, interpret=interpret,
+                                    **bl)
+        return jnp.mean(nll), (logits, labels, lse)
+
+    def bwd(res, g):
+        logits, labels, lse = res
+        # fold the mean's 1/B and the loss cotangent into one per-row scale
+        scale = jnp.full((logits.shape[0],), g / logits.shape[0],
+                         jnp.float32)
+        dl = _xent_dlogits_pallas(logits, labels, lse, scale,
+                                  interpret=interpret, **bl)
+        return dl.astype(logits.dtype), None   # labels: integer, no grad
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def softmax_xent(logits, labels, *, force: str | None = None, **blocks):
+    """Mean softmax cross-entropy loss.  logits: (B, C); labels: (B,) int."""
+    mode = _mode(force)
+    if mode == "ref":
+        return _ref.softmax_xent_ref(logits, labels)
+    interp = mode == "pallas_interpret"
+    fused = _fused_xent(interp, tuple(sorted(blocks.items())))
+    return fused(logits, labels)
 
 
 def flash_attention(q, k, v, causal: bool = True, *,

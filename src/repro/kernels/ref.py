@@ -17,6 +17,8 @@ __all__ = [
     "fcnn_layer_ref",
     "fcnn_layer_dgrad_ref",
     "fcnn_layer_wgrad_ref",
+    "softmax_xent_ref",
+    "softmax_xent_dlogits_ref",
     "flash_attention_ref",
     "ssd_chunk_ref",
 ]
@@ -79,6 +81,26 @@ def fcnn_layer_wgrad_ref(x: jax.Array, dy: jax.Array, y: jax.Array,
                  preferred_element_type=jnp.float32)
     db = jnp.sum(dz, axis=0)
     return dw.astype(x.dtype), db.astype(dy.dtype)
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy (the paper's output period, §5.1).
+
+    logits: (B, C); labels: (B,) int.  fp32 scalar — bit-identical to the
+    pre-fusion jnp loss this kernel replaced in models/fcnn.loss_fn.
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def softmax_xent_dlogits_ref(logits: jax.Array, labels: jax.Array,
+                             g: jax.Array) -> jax.Array:
+    """dlogits = (softmax − onehot) · g/B — oracle for the fused backward
+    of the mean cross-entropy (g is the scalar loss cotangent)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return ((p - onehot) * (g / logits.shape[0])).astype(logits.dtype)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -20,8 +20,13 @@ the fused Pallas forward (bias+activation in the GEMM epilogue) with a
 ``jax.custom_vjp`` backward running the fused dgrad/wgrad kernels, so both
 passes of the hot loop avoid an HBM round-trip of the (B, n_i) activation
 tensor; everywhere else it is the bit-compatible jnp oracle, differentiable
-by ordinary autodiff.  ``kernel_mode`` forces a dispatch mode (``"ref"`` /
-``"pallas"`` / ``"pallas_interpret"``) for tests and benchmarks.
+by ordinary autodiff.  The loss itself is the fused
+``kernels.ops.softmax_xent`` output period (online-softmax forward, fused
+dlogits backward), so every one of the 2l periods now runs fused on TPU.
+``kernel_mode`` forces a dispatch mode (``"ref"`` / ``"pallas"`` /
+``"pallas_interpret"``) for tests and benchmarks, and threads through
+``loss_fn`` and ``accuracy`` alike so eval never takes a different path
+than training.
 """
 
 from __future__ import annotations
@@ -85,12 +90,20 @@ def forward(params: Params, x: jax.Array,
 
 def loss_fn(params: Params, batch: Params,
             kernel_mode: str | None = None) -> jax.Array:
+    """Mean softmax cross-entropy — the fused output period.
+
+    Dispatches through ``kernels.ops.softmax_xent`` under the same mode as
+    the layer kernels: on TPU the online-softmax Pallas forward + fused
+    dlogits backward (probabilities/log-probs never reach HBM), elsewhere
+    the jnp oracle (identical to the pre-fusion log-softmax + NLL loss).
+    """
     logits = forward(params, batch["x"], kernel_mode=kernel_mode)
-    labels = batch["y"]
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
-    return jnp.mean(nll)
+    return ops.softmax_xent(logits, batch["y"], force=kernel_mode)
 
 
-def accuracy(params: Params, x: jax.Array, y: jax.Array) -> jax.Array:
-    return jnp.mean((jnp.argmax(forward(params, x), axis=-1) == y).astype(jnp.float32))
+def accuracy(params: Params, x: jax.Array, y: jax.Array,
+             kernel_mode: str | None = None) -> jax.Array:
+    """Eval takes the same dispatch path as training (``kernel_mode``
+    threads through exactly like ``loss_fn``)."""
+    logits = forward(params, x, kernel_mode=kernel_mode)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))

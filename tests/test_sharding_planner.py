@@ -65,6 +65,35 @@ def test_feasible_degrees():
     assert 512 in feas3
 
 
+def test_feasible_degrees_noncontiguous_products():
+    """Regression: degrees from NON-contiguous axis subsets (model×pod)
+    must be enumerated — the old prefix-run enumeration missed them and
+    plans silently snapped to a worse degree."""
+    feas = feasible_degrees({"model": 2, "data": 3, "pod": 2})
+    assert set(feas) == {1, 2, 3, 4, 6, 12}
+    assert feas[4] == ("model", "pod")       # the previously missing one
+    assert feas[2] == ("model",)             # fewer axes win ties
+    assert feas[6] == ("model", "data")
+    assert feas[12] == ("model", "data", "pod")
+    # snapping a target of 4 now lands exactly on 4 (it used to go to 3)
+    from repro.core.planner import _snap_degree
+    assert _snap_degree(4, feas) == 4
+
+
+def test_plan_fcnn_snaps_into_enlarged_feasible_set():
+    """plan_fcnn on a non-contiguous-product mesh only emits feasible,
+    divisibility-respecting degrees."""
+    w = FCNNWorkload([784, 1500, 784, 1000, 500, 10], batch_size=8)
+    cfg = ONoCConfig(lambda_max=64)
+    mesh = {"model": 2, "data": 3, "pod": 2}
+    plan = plan_fcnn(w, cfg, mesh)
+    feas = feasible_degrees(mesh)
+    for p in plan.periods:
+        assert p.degree in feas
+        assert w.n(p.period) % p.degree == 0
+        assert p.axes == feas[p.degree]
+
+
 def test_plan_fcnn_degrees_feasible_and_capped():
     w = FCNNWorkload([784, 1500, 784, 1000, 500, 10], batch_size=8)
     cfg = ONoCConfig(lambda_max=64)

@@ -19,6 +19,7 @@ from repro.core import (
 )
 from repro.core.analyses import analyze_mapping
 from repro.core.onoc_model import epoch_time
+from repro.core.simulator import ENoCConfig
 
 sizes_st = st.lists(st.integers(16, 500), min_size=2, max_size=5).map(
     lambda mid: [80] + mid + [10])
@@ -125,6 +126,53 @@ def test_enoc_vectorized_single_core_window():
     ref = be.transition_time_reference(w, cfg, 1, mp)
     assert tr.comm_s == ref.comm_s
     assert tr.hop_bytes == ref.hop_bytes
+
+
+def test_transition_schedule_pinned():
+    """Eq. (6)'s transition schedule: exactly 2l−2 transitions, at periods
+    {1..2l−1} \\ {l}; the period-1 hand-off is zero-charged ONLY on ONoC
+    (traffic still recorded), while ENoC pays for it."""
+    w = FCNNWorkload([80, 40, 20, 10], batch_size=4)   # l = 3
+    cfg = ONoCConfig(lambda_max=8)
+    expected = [i for i in range(1, 2 * w.l) if i != w.l]
+
+    tr_o = simulate_epoch(w, cfg, strategy="fm")
+    assert len(tr_o.transitions) == 2 * w.l - 2
+    assert [t.period for t in tr_o.transitions] == expected
+    first = tr_o.transitions[0]
+    assert first.period == 1 and first.comm_s == 0.0
+    assert first.bytes_per_sender > 0          # traffic recorded anyway
+    assert all(t.comm_s > 0 for t in tr_o.transitions[1:])
+
+    tr_e = simulate_epoch(w, cfg, strategy="fm", backend=ENoCBackend())
+    assert [t.period for t in tr_e.transitions] == expected
+    assert tr_e.transitions[0].comm_s > 0      # nothing is free on ENoC
+
+
+def test_enoc_channels_scale_drain():
+    """The router channel count divides the per-link drain time, in both
+    the vectorized model and the per-pair oracle."""
+    w = FCNNWorkload([784, 1000, 500, 10], batch_size=8)
+    cfg = ONoCConfig(lambda_max=64)
+    mp = map_cores(w, cfg, "fm", fnp_cores(w, cfg, 150))
+    be1, be2, be4 = (ENoCBackend(ENoCConfig(channels=c)) for c in (1, 2, 4))
+    for i in range(1, 2 * w.l):
+        if i == w.l:
+            continue
+        t1, t2, t4 = (be.transition_time(w, cfg, i, mp)
+                      for be in (be1, be2, be4))
+        for be, t in ((be1, t1), (be2, t2), (be4, t4)):
+            ref = be.transition_time_reference(w, cfg, i, mp)
+            assert t.comm_s == ref.comm_s and t.hop_bytes == ref.hop_bytes
+        # comm = drain/channels + latency: solve (drain, latency) from the
+        # 1- and 4-channel runs, then the 2-channel run must land on the
+        # same line — i.e. the channel count divides exactly the drain term
+        drain = (t1.comm_s - t4.comm_s) * 4.0 / 3.0
+        latency = t1.comm_s - drain
+        assert drain > 0 and latency >= 0
+        assert t2.comm_s == pytest.approx(drain / 2.0 + latency)
+        # hop_bytes is a traffic volume, independent of channels
+        assert t1.hop_bytes == t2.hop_bytes == t4.hop_bytes
 
 
 def test_energy_breakdown_positive():
