@@ -5,11 +5,14 @@
 #                     microbench, so the fused-loss path is exercised)
 #   make bench-json   full benchmark sweep -> BENCH_fcnn.json
 #                     (includes softmax_xent_microbench by default)
+#   make bench-gate   regression gate: fresh sweep diffed against the
+#                     committed BENCH_fcnn.json — fails on paper-claim
+#                     regressions or >20% microbench speedup drop
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench-smoke bench-json
+.PHONY: verify bench-smoke bench-json bench-gate
 
 verify:
 	$(PY) -m pytest -x -q
@@ -20,3 +23,6 @@ bench-smoke:
 
 bench-json:
 	$(PY) -m benchmarks.run --json BENCH_fcnn.json
+
+bench-gate:
+	$(PY) -m benchmarks.gate --baseline BENCH_fcnn.json

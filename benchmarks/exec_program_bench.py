@@ -1,0 +1,47 @@
+"""Period-program compiler benchmark: compile wall time, instruction mix,
+serialized size, and the cost contract (program annotations must equal
+``core.simulator.simulate_epoch``) for every paper benchmark x mapping
+strategy on the 8-device executor ring."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.core.allocation import MappingStrategy
+from repro.core.planner import plan_fcnn, ring_mesh_axes
+from repro.core.simulator import simulate_epoch
+from repro.exec.program import compile_program
+
+N_DEV = 8
+
+
+def run() -> list[dict]:
+    rows = []
+    cfg = onoc_config(lambda_max=64)
+    for nn in ("NN1", "NN2", "NN3"):
+        w = workload(nn, batch_size=64)
+        for strat in MappingStrategy:
+            plan = plan_fcnn(w, cfg, ring_mesh_axes(N_DEV), strategy=strat)
+            t0 = time.perf_counter()
+            prog = compile_program(plan, w, cfg, N_DEV)
+            compile_us = 1e6 * (time.perf_counter() - t0)
+            trace = simulate_epoch(w, cfg, mapping=plan.mapping)
+            rows.append({
+                "case": f"{nn.lower()}_{strat.value}",
+                "nn": nn,
+                "strategy": strat.value,
+                "n_devices": N_DEV,
+                "instructions": len(prog.instructions),
+                "runs": len(prog.runs()),
+                "sends": len(prog.sends()),
+                "frees": len(prog.frees()),
+                "json_bytes": len(prog.to_json()),
+                "compile_us": compile_us,
+                "program_total_s": prog.total_s,
+                "sim_total_s": trace.total_s,
+                "cost_match": bool(
+                    prog.compute_s == trace.compute_s
+                    and prog.comm_s == trace.comm_s),
+            })
+    return rows

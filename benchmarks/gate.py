@@ -1,0 +1,119 @@
+"""Benchmark regression gate (``make bench-gate``).
+
+Runs ``benchmarks.run --json`` fresh (or takes ``--report PATH``) and
+diffs it against the committed baseline (``BENCH_fcnn.json``).  Exits 1
+when:
+
+  * a reproduction check that PASSed in the baseline now FAILs or has
+    disappeared from the report (deleting a check is a regression too), or
+  * a microbench speedup ratio (fused vs reference implementation)
+    degrades by more than ``--slowdown`` (default 20%).
+
+Raw wall-clock fields are never compared — only speedup *ratios*, which
+are stable across machines since both sides of the ratio run on the same
+box.  After an intentional change (new checks, a real kernel win), refresh
+the baseline with ``make bench-json`` and commit the new snapshot.
+
+  PYTHONPATH=src python -m benchmarks.gate [--baseline BENCH_fcnn.json]
+      [--report PATH] [--slowdown 0.20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+
+SPEEDUP_FIELDS = ("fwd_speedup", "fwdbwd_speedup")
+
+
+def _check_key(line: str) -> str:
+    """Stable identity of a check line: everything before the measured
+    numbers ("check,table7,plateau-APE<=2.3% (paper claim)")."""
+    head = line.split(" -> ")[0]
+    return head.split(":")[0] if ":" in head else head
+
+
+def _verdict(line: str) -> str | None:
+    return line.rsplit("-> ", 1)[1].strip() if "-> " in line else None
+
+
+def compare(base: dict, cur: dict, slowdown: float) -> list[str]:
+    failures: list[str] = []
+
+    cur_checks = {}
+    for line in cur.get("checks", []):
+        if _verdict(line) in ("PASS", "FAIL"):
+            cur_checks[_check_key(line)] = line
+    for line in base.get("checks", []):
+        if _verdict(line) != "PASS":
+            continue  # informational or already-failing: not gated
+        key = _check_key(line)
+        now = cur_checks.get(key)
+        if now is None:
+            failures.append(f"check disappeared (was PASS): {key}")
+        elif _verdict(now) == "FAIL":
+            failures.append(f"paper-claim regression: {now}")
+
+    for name, bench in base.get("benchmarks", {}).items():
+        if not name.endswith("microbench"):
+            continue
+        cur_bench = cur.get("benchmarks", {}).get(name)
+        if cur_bench is None:
+            failures.append(f"microbench disappeared: {name}")
+            continue
+        cur_rows = {r.get("case"): r for r in cur_bench["rows"]}
+        for row in bench["rows"]:
+            case = row.get("case")
+            now = cur_rows.get(case)
+            if now is None:
+                failures.append(f"{name}: case {case!r} disappeared")
+                continue
+            for f in SPEEDUP_FIELDS:
+                if f in row and f in now and now[f] < (1 - slowdown) * row[f]:
+                    failures.append(
+                        f"{name}/{case}: {f} {row[f]:.3f} -> {now[f]:.3f} "
+                        f"(>{slowdown:.0%} slowdown)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_fcnn.json")
+    ap.add_argument("--report", default=None,
+                    help="pre-computed benchmarks.run --json report "
+                         "(default: run the benchmarks now)")
+    ap.add_argument("--slowdown", type=float, default=0.20,
+                    help="max tolerated microbench speedup-ratio drop")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    if args.report:
+        report_path = args.report
+    else:
+        report_path = tempfile.mktemp(suffix=".json", prefix="bench_gate_")
+        print(f"# bench-gate: running benchmarks -> {report_path}")
+        subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--json", report_path],
+            check=True)
+    with open(report_path) as f:
+        cur = json.load(f)
+
+    failures = compare(base, cur, args.slowdown)
+    if failures:
+        print(f"\n# bench-gate: FAIL ({len(failures)} regressions "
+              f"vs {args.baseline})")
+        for msg in failures:
+            print(f"  {msg}")
+        sys.exit(1)
+    n_checks = sum(1 for c in base.get("checks", []) if _verdict(c) == "PASS")
+    print(f"\n# bench-gate: OK ({n_checks} gated checks held, "
+          f"microbench within {args.slowdown:.0%} of {args.baseline})")
+
+
+if __name__ == "__main__":
+    main()

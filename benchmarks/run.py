@@ -24,6 +24,7 @@ import time
 sys.path.insert(0, "src")
 
 from benchmarks import (  # noqa: E402
+    exec_program_bench,
     fcnn_kernel_microbench,
     fig7_percore_sweep,
     fig10_onoc_vs_enoc,
@@ -44,6 +45,7 @@ BENCHMARKS = {
     "roofline_report": roofline_report.run,
     "fcnn_kernel_microbench": fcnn_kernel_microbench.run,
     "softmax_xent_microbench": fcnn_kernel_microbench.run_softmax_xent,
+    "exec_program_bench": exec_program_bench.run,
 }
 
 
@@ -149,6 +151,11 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
             >= by[(lam, "orrm")]["hotspot_consecutive_periods"]
             for lam in (8, 64))
         out.append(f"check,thm2,FM hotspot >= ORRM hotspot -> "
+                   f"{'PASS' if ok else 'FAIL'}")
+    if name == "exec_program_bench":
+        ok = all(r["cost_match"] for r in rows)
+        out.append(f"check,exec,program cost annotations == simulate_epoch "
+                   f"({len(rows)} programs, all strategies) -> "
                    f"{'PASS' if ok else 'FAIL'}")
     if name == "fcnn_kernel_microbench":
         out.append(_microbench_check(rows, "fused fwd+bwd vs einsum"))

@@ -4,6 +4,13 @@ parallelism degrees chosen by the ONoC planner and realized as JAX
 shardings.
 
   PYTHONPATH=src python examples/train_fcnn_onoc.py [--steps 300]
+
+With ``--program N`` the planner's schedule is *executed* instead of just
+priced: the plan is compiled to a static RUN/SEND/RECV/FREE period program
+(exec/program.py), cross-checked against core.simulator.simulate_epoch,
+and interpreted under shard_map on an N-device CPU ring (exec/runtime.py):
+
+  PYTHONPATH=src python examples/train_fcnn_onoc.py --program 8 --steps 100
 """
 
 import argparse
@@ -11,16 +18,6 @@ import sys
 import time
 
 sys.path.insert(0, "src")
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.onoc_model import FCNNWorkload, ONoCConfig
-from repro.core.planner import plan_fcnn
-from repro.data import Batcher, fcnn_classification_dataset
-from repro.launch.mesh import make_host_mesh
-from repro.models import fcnn
-from repro.optim import adam, linear_warmup_cosine
 
 
 def main() -> None:
@@ -31,12 +28,39 @@ def main() -> None:
                     choices=["ref", "pallas", "pallas_interpret"],
                     help="force the fcnn_layer dispatch mode (default: "
                          "fused Pallas fwd+bwd on TPU, jnp oracle elsewhere)")
+    ap.add_argument("--program", type=int, default=0, metavar="N",
+                    help="compile the plan to a period program and execute "
+                         "it under shard_map on an N-device CPU ring")
+    ap.add_argument("--strategy", default="orrm",
+                    choices=["fm", "rrm", "orrm"],
+                    help="core mapping strategy (program mode)")
     args = ap.parse_args()
+
+    if args.program:
+        # must run before any other jax backend touch (forces N CPU devices)
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(args.program)
+    else:
+        mesh = None
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.onoc_model import FCNNWorkload, ONoCConfig
+    from repro.core.planner import plan_fcnn
+    from repro.data import Batcher, fcnn_classification_dataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import fcnn
+    from repro.optim import adam, linear_warmup_cosine
 
     # reduced NN1 (784-1000-500-10 -> 784-256-128-10) so CPU runs fast
     sizes = [784, 256, 128, 10]
     workload = FCNNWorkload(sizes, batch_size=args.batch)
     onoc = ONoCConfig(m=1000, lambda_max=64)
+
+    if args.program:
+        _run_program_mode(args, workload, onoc, mesh)
+        return
 
     mesh = make_host_mesh()
     plan = plan_fcnn(workload, onoc, dict(mesh.shape), strategy="orrm")
@@ -78,6 +102,65 @@ def main() -> None:
                                     kernel_mode=args.kernel))
     print(f"final train accuracy: {final_acc:.3f}")
     assert final_acc > 0.8, "training failed to learn"
+
+
+def _run_program_mode(args, workload, onoc, mesh) -> None:
+    """Compile the plan to a RUN/SEND/RECV/FREE program, cross-check its
+    cost annotations against the simulator, and train through it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.planner import plan_fcnn, ring_mesh_axes
+    from repro.core.simulator import simulate_epoch
+    from repro.data import fcnn_classification_dataset
+    from repro.exec import compile_program
+    from repro.exec.runtime import build_train_step
+    from repro.models import fcnn
+    from repro.optim import adam, linear_warmup_cosine
+    from repro.parallel.sharding import replicate
+
+    n = args.program
+    sizes = list(workload.layer_sizes)
+    plan = plan_fcnn(workload, onoc, ring_mesh_axes(n),
+                     strategy=args.strategy)
+    prog = compile_program(plan, workload, onoc, n)
+    print(f"compiled {args.strategy.upper()} program: "
+          f"{len(prog.instructions)} instructions over {2 * prog.l} periods "
+          f"on a {n}-device ring")
+    for i in prog.instructions:
+        extra = (f" layer={i.layer} {i.phase} m*={i.onoc_cores} "
+                 f"degree={i.degree}" if i.opcode.value == "run" else "")
+        print(f"  P{i.period:>2} {i.opcode.value.upper():<4} "
+              f"devices={list(i.devices)} cost={i.cost_s:.3e}s{extra}")
+
+    trace = simulate_epoch(workload, onoc, mapping=plan.mapping)
+    assert prog.compute_s == trace.compute_s
+    assert prog.comm_s == trace.comm_s
+    print(f"cost contract: program total {prog.total_s:.6e}s == "
+          f"simulate_epoch {trace.total_s:.6e}s ✓")
+
+    opt = adam(linear_warmup_cosine(3e-3, 20, args.steps))
+    step, _ = build_train_step(prog, mesh, opt, kernel_mode=args.kernel)
+
+    params = replicate(fcnn.init(jax.random.PRNGKey(0), sizes), mesh)
+    opt_state = opt.init(params)
+    x, y = fcnn_classification_dataset(4096, input_dim=sizes[0], seed=0)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        lo = (i * args.batch) % (len(x) - args.batch + 1)
+        batch = {"x": jnp.asarray(x[lo:lo + args.batch]),
+                 "y": jnp.asarray(y[lo:lo + args.batch])}
+        params, opt_state, loss = step(params, opt_state, batch, i)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(loss):.4f}")
+    dt = time.time() - t0
+    print(f"\n{args.steps} program steps in {dt:.1f}s "
+          f"({1e3 * dt / args.steps:.1f} ms/step)")
+    final_acc = float(fcnn.accuracy(params, jnp.asarray(x), jnp.asarray(y),
+                                    kernel_mode=args.kernel))
+    print(f"final train accuracy: {final_acc:.3f}")
+    assert final_acc > 0.8, "program-mode training failed to learn"
 
 
 if __name__ == "__main__":

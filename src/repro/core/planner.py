@@ -27,7 +27,7 @@ from repro.core.onoc_model import FCNNWorkload, ONoCConfig, optimal_cores
 from repro.core.allocation import MappingStrategy, map_cores, Mapping
 
 __all__ = ["TPUTarget", "PeriodPlan", "FCNNPlan", "plan_fcnn",
-           "feasible_degrees", "plan_gemm_period"]
+           "feasible_degrees", "ring_mesh_axes", "plan_gemm_period"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +80,25 @@ def feasible_degrees(mesh_axes: dict[str, int]) -> dict[int, tuple[str, ...]]:
             prod = math.prod(mesh_axes[a] for a in axes)
             out.setdefault(prod, axes)
     return out
+
+
+def ring_mesh_axes(n_devices: int, prefix: str = "ring") -> dict[str, int]:
+    """Mesh axes whose subset products cover EVERY divisor of n_devices —
+    one axis per prime factor (with multiplicity), so ``feasible_degrees``
+    can realize any divisor.  This is the planning view of the execution
+    engine's device ring (exec/program.py): a ring of n cores can activate
+    any m | n of them with a uniform chunk layout."""
+    if n_devices < 1:
+        raise ValueError("n_devices >= 1")
+    axes: dict[str, int] = {}
+    rem, p, k = n_devices, 2, 0
+    while rem > 1:
+        while rem % p == 0:
+            axes[f"{prefix}{k}"] = p
+            rem //= p
+            k += 1
+        p += 1 if p == 2 else 2
+    return axes or {f"{prefix}0": 1}
 
 
 def _snap_degree(target: int, feas: dict[int, tuple[str, ...]]) -> int:

@@ -1,0 +1,38 @@
+"""Period-schedule execution engine.
+
+The paper's fine-grained model assigns every one of the 2l periods of an
+FCNN training epoch its own optimal core count, with a mapping strategy
+(FM/RRM/ORRM) deciding how the active window moves between periods.  Until
+this package existed the repo only *priced* those schedules
+(``core.simulator``); here they become executable:
+
+  * ``exec.program``  — the schedule compiler: lowers a planner plan plus a
+    ``core.allocation.Mapping`` into a static, serializable per-period
+    instruction program (RUN / SEND / RECV / FREE, alpa-style) whose cost
+    annotations are cross-checkable against ``core.simulator.simulate_epoch``.
+  * ``exec.runtime``  — the executor: interprets the program under
+    ``jax.shard_map`` on a device mesh, driving the fused Pallas kernels
+    (``kernels.ops``) as the per-shard math.
+"""
+
+from repro.exec.program import (  # noqa: F401
+    Instruction,
+    Opcode,
+    PeriodProgram,
+    compile_fcnn_program,
+    compile_program,
+)
+from repro.exec.runtime import (  # noqa: F401
+    ProgramExecutor,
+    build_train_step,
+)
+
+__all__ = [
+    "Opcode",
+    "Instruction",
+    "PeriodProgram",
+    "compile_program",
+    "compile_fcnn_program",
+    "ProgramExecutor",
+    "build_train_step",
+]

@@ -1,0 +1,191 @@
+"""Executor: interpret a PeriodProgram under ``shard_map`` on a device mesh.
+
+The program is a static SPMD schedule; every device runs the same
+interpretation loop and resolves its role per period from
+``jax.lax.axis_index`` against the program's device windows.  Lowering of
+the instruction set to mesh operations:
+
+  RUN (fp, layer i)   each device in the period's window computes one
+                      column chunk of layer i — ``ops.fcnn_layer`` on the
+                      (B, n_{i-1}) activation and its (n_{i-1}, n_i/d_i)
+                      weight slice, i.e. the fused Pallas kernel on TPU and
+                      the jnp oracle / interpreted kernel elsewhere.
+                      Devices outside the window redundantly compute the
+                      window head's chunk; their output is never selected
+                      (see FREE) so it is dead code to XLA.
+  SEND + RECV (fp)    one ``jax.lax.all_gather`` over the ring axis plus a
+                      static window-ordered selection: chunk j of the next
+                      activation comes from device window[j].  This is the
+                      paper's inter-period WDM broadcast: senders are the
+                      current window, receivers the next.
+  FREE                devices released at a transition simply stop
+                      contributing: their chunks are not selected, so both
+                      their forward values and their gradients are exactly
+                      zero-influence from that period on.
+  RUN/SEND/RECV (bp)  realized by JAX AD, exactly as the model docstring
+                      promises: differentiating the interpreted forward
+                      turns each all_gather into its transpose
+                      (psum_scatter — the BP reduce-scatter, "senders of
+                      period i are receivers of period 2l-i+1", Eq. 11) and
+                      runs the fused dgrad/wgrad kernels of
+                      ``kernels.ops.fcnn_layer``'s custom_vjp as the BP
+                      RUNs.  The BP instructions in the program are the
+                      cost-annotated contract for what AD emits.
+
+The loss period (the FP->BP turnaround at period l) gathers the logit
+chunks within the final window and evaluates the fused
+``ops.softmax_xent``; the program schedules no transition there (the
+paper keeps data in place at the turnaround, g(m_l) = 0).
+
+Numerics: params and batch enter fully replicated (PartitionSpec()), each
+chunk of each weight matrix is computed by exactly one selected device, so
+the transpose-sum over devices reproduces the single-device gradient —
+executor losses/grads match the single-device fused path to fp tolerance
+(pinned by tests/test_exec_runtime.py for paper configs on a CPU mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.exec.program import PeriodProgram
+from repro.kernels import ops
+from repro.optim.optimizers import Optimizer
+
+Params = dict[str, Any]
+
+__all__ = ["ProgramExecutor", "build_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _PeriodLayout:
+    """Static per-FP-period geometry precomputed from RUN instructions."""
+
+    layer: int                 # 1-based
+    width: int                 # output columns per chunk (n_i / d_i)
+    n_out: int                 # n_i
+    activation: str
+    window: np.ndarray         # device id of chunk j, shape (d_i,)
+    owner_chunk: np.ndarray    # chunk index each device computes, shape (n,)
+
+
+class ProgramExecutor:
+    """Interprets a compiled PeriodProgram on a 1-axis device mesh.
+
+    ``loss_fn(params, batch)`` has the same signature and semantics as
+    ``models.fcnn.loss_fn`` and is an ordinary traceable JAX function —
+    jit, grad and optimizers compose with it as usual.
+    """
+
+    def __init__(self, program: PeriodProgram, mesh: Mesh,
+                 kernel_mode: str | None = None):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"executor mesh must have one (ring) axis, got "
+                f"{mesh.axis_names}")
+        n = mesh.devices.size
+        if n != program.n_devices:
+            raise ValueError(
+                f"program compiled for {program.n_devices} devices, mesh "
+                f"has {n}")
+        self.program = program
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        # Freeze the kernel dispatch for the program's whole lifetime so
+        # every period of every step takes the same path.
+        self.kernel_mode = ops.resolve_mode(kernel_mode)
+
+        self._layout: list[_PeriodLayout] = []
+        for run in program.runs(phase="fp"):
+            window = np.asarray(run.devices, dtype=np.int32)
+            owner = np.zeros(n, dtype=np.int32)
+            owner[window] = np.arange(len(window), dtype=np.int32)
+            self._layout.append(_PeriodLayout(
+                layer=run.layer, width=run.chunk_width,
+                n_out=program.layer_sizes[run.layer],
+                activation=run.activation, window=window,
+                owner_chunk=owner,
+            ))
+
+        self._sharded = shard_map(
+            self._device_program, mesh=mesh,
+            in_specs=(P(), P(), P()), out_specs=P(),
+            # loss is replicated by construction (identical full logits on
+            # every device after the final gather); collective use below is
+            # beyond what the static replication checker can verify.
+            check_rep=False,
+        )
+
+    # ------------------------------------------------------------- interpret
+
+    def _device_program(self, params: Params, x: jax.Array,
+                        y: jax.Array) -> jax.Array:
+        """One device's view of the program: FP RUNs + transitions + loss."""
+        me = jax.lax.axis_index(self.axis)
+        h = x
+        batch = x.shape[0]
+        for lay in self._layout:
+            lp = params["layers"][lay.layer - 1]
+            # RUN: this device's column chunk of W/b (freed devices shadow
+            # the window head's chunk; their result is never selected).
+            chunk = jnp.asarray(lay.owner_chunk)[me]
+            w_loc = jax.lax.dynamic_slice_in_dim(
+                lp["w"], chunk * lay.width, lay.width, axis=1)
+            b_loc = jax.lax.dynamic_slice_in_dim(
+                lp["b"], chunk * lay.width, lay.width, axis=0)
+            y_loc = ops.fcnn_layer(h, w_loc, b_loc, lay.activation,
+                                   force=self.kernel_mode)
+            # SEND/RECV (or the period-l turnaround gather): one collective;
+            # chunk j of the next activation comes from device window[j].
+            gathered = jax.lax.all_gather(y_loc, self.axis)   # (n, B, width)
+            h = jnp.moveaxis(gathered[lay.window], 0, 1)      # (B, d, width)
+            h = h.reshape(batch, lay.n_out)
+        return ops.softmax_xent(h, y, force=self.kernel_mode)
+
+    # ------------------------------------------------------------------ api
+
+    def loss_fn(self, params: Params, batch: Params) -> jax.Array:
+        """Mean softmax cross-entropy of the program on ``batch``."""
+        self._check_params(params)
+        return self._sharded(params, batch["x"], batch["y"])
+
+    def _check_params(self, params: Params) -> None:
+        sizes = self.program.layer_sizes
+        layers = params["layers"]
+        if len(layers) != self.program.l:
+            raise ValueError(
+                f"program has {self.program.l} layers, params have "
+                f"{len(layers)}")
+        for i, lp in enumerate(layers):
+            want = (sizes[i], sizes[i + 1])
+            if tuple(lp["w"].shape) != want:
+                raise ValueError(
+                    f"layer {i + 1}: weight shape {tuple(lp['w'].shape)} "
+                    f"!= program shape {want}")
+
+
+def build_train_step(
+    program: PeriodProgram,
+    mesh: Mesh,
+    optimizer: Optimizer,
+    kernel_mode: str | None = None,
+) -> tuple[Callable, ProgramExecutor]:
+    """A jitted ``step(params, opt_state, batch, i)`` whose loss is the
+    compiled program executed under shard_map.  Drop-in for the plain
+    single-device step of examples/train_fcnn_onoc.py."""
+    ex = ProgramExecutor(program, mesh, kernel_mode=kernel_mode)
+
+    @jax.jit
+    def step(params, opt_state, batch, i):
+        loss, grads = jax.value_and_grad(ex.loss_fn)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params, i)
+        return params, opt_state, loss
+
+    return step, ex

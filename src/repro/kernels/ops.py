@@ -73,17 +73,27 @@ from repro.kernels.softmax_xent import (
 )
 from repro.kernels.ssd_scan import ssd_chunk as _ssd_pallas
 
-__all__ = ["fcnn_layer", "softmax_xent", "flash_attention", "ssd_chunk"]
+__all__ = ["fcnn_layer", "softmax_xent", "flash_attention", "ssd_chunk",
+           "resolve_mode"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _mode(force: str | None) -> str:
+def resolve_mode(force: str | None) -> str:
+    """Resolve the dispatch mode every wrapper below uses: ``force`` if
+    given, else "pallas" on TPU and "ref" elsewhere.  Public so long-lived
+    callers (the period-program executor, benchmark harnesses) can freeze
+    one mode up front instead of re-resolving per call."""
     if force is not None:
+        if force not in ("ref", "pallas", "pallas_interpret"):
+            raise ValueError(f"unknown kernel mode {force!r}")
         return force
     return "pallas" if _on_tpu() else "ref"
+
+
+_mode = resolve_mode
 
 
 @functools.lru_cache(maxsize=None)

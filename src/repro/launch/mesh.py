@@ -11,10 +11,15 @@ touch jax device state (the dry-run sets XLA_FLAGS before first jax use).
 
 from __future__ import annotations
 
+import os
+
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_test_mesh"]
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -27,3 +32,24 @@ def make_host_mesh() -> Mesh:
     """Whatever devices exist, flat on the "data" axis (CPU tests)."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_test_mesh(n: int = 8, axis: str = "cores") -> Mesh:
+    """CPU multi-device ring for executor/shard_map tests — no TPUs needed.
+
+    Forces ``n`` host CPU devices via XLA_FLAGS; only effective if jax has
+    not initialized its backends yet, so set it as early as possible
+    (tests/conftest.py forces 8 for the whole suite).  The first ``n``
+    devices become a 1-axis ring mesh, the layout ``exec.runtime`` executes
+    period programs on.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _HOST_COUNT_FLAG not in flags:
+        # No-op if a backend already exists, harmless either way.
+        os.environ["XLA_FLAGS"] = f"{_HOST_COUNT_FLAG}={n} {flags}".strip()
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, found {len(devices)}; set "
+            f"XLA_FLAGS={_HOST_COUNT_FLAG}={n} before the first jax call")
+    return Mesh(np.asarray(devices[:n]), (axis,))

@@ -126,6 +126,50 @@ def build_train_step(
     return jitted, st_shardings, batch_shardings, state_spec
 
 
+def build_fcnn_program_step(
+    program,
+    mesh: Mesh,
+    settings: TrainSettings = TrainSettings(),
+    kernel_mode: str | None = None,
+):
+    """Period-program analogue of ``build_train_step`` for the paper's
+    FCNN: the loss is a compiled RUN/SEND/RECV/FREE schedule
+    (exec.program.PeriodProgram) interpreted under shard_map on ``mesh``
+    (exec.runtime), with the same AdamW + global-norm clipping as the
+    generic step.  Returns (jitted step, executor); state is the plain
+    {"params", "opt", "step"} dict (init via ``init_fcnn_program_state``).
+    """
+    from repro.exec.runtime import ProgramExecutor
+
+    opt = adamw(settings.learning_rate, weight_decay=settings.weight_decay)
+    ex = ProgramExecutor(program, mesh, kernel_mode=kernel_mode)
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(ex.loss_fn)(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, settings.grad_clip)
+        params, opt_state = opt.update(grads, state["opt"], state["params"],
+                                       state["step"])
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return jax.jit(step, donate_argnums=(0,)), ex
+
+
+def init_fcnn_program_state(program, settings: TrainSettings, key) -> Params:
+    """TrainState for ``build_fcnn_program_step`` (params from the
+    program's layer sizes, AdamW moments, step counter)."""
+    from repro.models import fcnn
+
+    params = fcnn.init(key, program.layer_sizes)
+    opt = adamw(settings.learning_rate, weight_decay=settings.weight_decay)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
 def _serving_specs(model: Model, mesh: Mesh, shape: ShapeSpec,
                    rules: AxisRules, max_len: int):
     p_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))

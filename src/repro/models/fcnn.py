@@ -73,13 +73,22 @@ def param_axes(layer_sizes: Sequence[int],
     return {"layers": layers}
 
 
+def period_activation(layer: int, l: int) -> str:  # noqa: E741 — paper notation
+    """Activation of FP period/layer ``layer`` (1-based) in an l-layer FCNN:
+    sigmoid in hidden layers, none at the output (softmax lives in the loss
+    period).  Single source of truth shared by ``forward`` and the period-
+    program compiler (exec/program.py), so a compiled schedule can never
+    disagree with the reference forward pass."""
+    return "sigmoid" if layer < l else "none"
+
+
 def forward(params: Params, x: jax.Array,
             kernel_mode: str | None = None) -> jax.Array:
     """x: (B, n_0) -> logits (B, n_l).  Period i = one loop iteration."""
     h = x
     n = len(params["layers"])
     for i, lp in enumerate(params["layers"]):
-        act = "sigmoid" if i < n - 1 else "none"
+        act = period_activation(i + 1, n)
         h = ops.fcnn_layer(h, lp["w"], lp["b"], act, force=kernel_mode)
         if i < n - 1:
             # the paper's inter-period broadcast: outputs leave this

@@ -20,21 +20,30 @@ Params = Any
 
 
 def accumulate_grads(loss_fn: Callable, params: Params, microbatches: Params,
-                     unroll: bool | int = 1) -> tuple[jax.Array, Params]:
+                     unroll: bool | int = 1,
+                     acc_dtype: jnp.dtype | None = None
+                     ) -> tuple[jax.Array, Params]:
     """microbatches: pytree with leading (n_micro, ...) axes.
     Returns (mean loss, mean grads).  Collectives for the grad all-reduce
     fire once per microbatch inside the scan, overlapping the next
     microbatch's compute on TPU (XLA async collectives).  ``unroll`` is the
-    dry-run cost-probe hook (see configs.base.ModelConfig.probe_unroll)."""
+    dry-run cost-probe hook (see configs.base.ModelConfig.probe_unroll).
+
+    Each accumulator matches its parameter's dtype by default, so bf16
+    grads stay bf16 (no silent fp32 upcast doubling accumulator memory);
+    pass ``acc_dtype`` (e.g. jnp.float32) to accumulate at a higher
+    precision than the params — grads are returned in that dtype."""
     grad_fn = jax.value_and_grad(loss_fn)
 
     def body(carry, mb):
         loss_acc, grad_acc = carry
         loss, grads = grad_fn(params, mb)
-        grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+        grad_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                grad_acc, grads)
         return (loss_acc + loss, grad_acc), None
 
-    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, acc_dtype or p.dtype), params)
     n = jax.tree.leaves(microbatches)[0].shape[0]
     (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros),
                                     microbatches, unroll=unroll)

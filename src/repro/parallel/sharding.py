@@ -26,6 +26,7 @@ __all__ = [
     "DEFAULT_RULES",
     "logical_to_mesh",
     "named_sharding",
+    "replicate",
     "shard_constraint",
     "tree_shardings",
 ]
@@ -152,6 +153,16 @@ def shard_constraint(
     rules = rules or active_rules()
     spec = logical_to_mesh(logical_axes, mesh, rules)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def replicate(tree: Any, mesh: Mesh) -> Any:
+    """device_put a pytree fully replicated across ``mesh``.
+
+    The period-program executor's placement convention: every device holds
+    the full params/batch and slices its per-period chunk on-device
+    (exec/runtime.py), so replication is the correct resident layout."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
 
 
 def _current_mesh() -> Mesh | None:

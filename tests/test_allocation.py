@@ -20,6 +20,7 @@ from repro.core.analyses import (
     state_transitions_closed_form,
 )
 from repro.core.onoc_model import FCNNWorkload, ONoCConfig, optimal_cores
+from repro.configs.nn_benchmarks import onoc_config, workload
 
 sizes_st = st.lists(st.integers(8, 400), min_size=3, max_size=6).map(
     lambda mid: [50] + mid + [10])
@@ -167,3 +168,77 @@ def test_path_length_ranking(sizes, cfg):
              for s in MappingStrategy}
     assert paths[MappingStrategy.FM] <= paths[MappingStrategy.RRM]
     assert paths[MappingStrategy.FM] <= paths[MappingStrategy.ORRM]
+
+
+# --------------------------------------------------------- paper §4 pinned
+# Exact values for the paper benchmark FCNNs on the 1000-core ring, so the
+# period-program compiler's transition costs (exec/program.py prices every
+# SEND from these mappings) rest on tested ground.  Any change to
+# Eqs. 16-18, Algorithm 1, or the window layout moves these numbers.
+
+def _paper(nn, batch=64):
+    w = workload(nn, batch_size=batch)
+    cfg = onoc_config(lambda_max=64)
+    return w, cfg, optimal_cores(w, cfg)
+
+
+def test_pinned_reuse_nn1():
+    """NN1 (784-1000-500-10): E[r] = (1510-1000)/2 = 255, Eq. 17 chain
+    r = [0, 255, 10] (r_3 capped by m_3* = 10)."""
+    _, cfg, ms = _paper("NN1")
+    assert ms == [1000, 500, 10]
+    assert expected_reuse(ms, cfg.m) == 255.0
+    assert reuse_counts(ms, cfg.m) == [0, 255, 10]
+
+
+def test_pinned_reuse_nn2():
+    """NN2 (784-1500-784-1000-500-10): E[r] = (3294-1000)/4 = 573.5,
+    r = [0, 574, 210, 500, 0] — r_3 capped by m_2*-r_2 = 784-574 = 210,
+    r_5 = min(574, m_4*-r_4 = 0, 10) = 0."""
+    _, cfg, ms = _paper("NN2")
+    assert ms == [1000, 784, 1000, 500, 10]
+    assert expected_reuse(ms, cfg.m) == 573.5
+    assert reuse_counts(ms, cfg.m) == [0, 574, 210, 500, 0]
+
+
+def test_pinned_strategy_tradeoffs_nn2():
+    """The paper's §4 comparison (Tables 1-3) on NN2: FM minimizes state
+    transitions but maximizes hotspot and per-core memory; RRM minimizes
+    hotspot; ORRM matches RRM's hotspot at the lowest memory."""
+    w, cfg, ms = _paper("NN2")
+    stats = {}
+    for s in MappingStrategy:
+        mp = map_cores(w, cfg, s, ms)
+        stats[s] = (hotspot_consecutive_periods(mp), state_transitions(mp),
+                    max_memory_requirement_bytes(w, mp))
+    assert stats[MappingStrategy.FM] == (2 * w.l, 4844, 4116480.0)
+    assert stats[MappingStrategy.RRM] == (4, 4884, 3731456.0)
+    assert stats[MappingStrategy.ORRM] == (4, 4884, 3347456.0)
+    # the trade-off triangle the compiler's strategy choice navigates
+    hot, st, mem = zip(*(stats[s] for s in MappingStrategy))
+    assert min(st) == stats[MappingStrategy.FM][1]          # FM: fewest moves
+    assert min(hot) == stats[MappingStrategy.RRM][0]        # RRM: coolest
+    assert min(mem) == stats[MappingStrategy.ORRM][2]       # ORRM: leanest
+
+
+def test_pinned_fm_equals_orrm_cost_when_ring_saturated():
+    """NN1's first period uses the whole ring (m_1* = m = 1000), so ORRM's
+    planned reuse is forced maximal and its costs degenerate to FM's
+    (windows still rotate, but transitions / hotspot / memory coincide) —
+    the compiler prices both strategies identically on NN1."""
+    w, cfg, ms = _paper("NN1")
+    fm = map_cores(w, cfg, MappingStrategy.FM, ms)
+    orrm = map_cores(w, cfg, MappingStrategy.ORRM, ms)
+    assert state_transitions(fm) == state_transitions(orrm) == 3980
+    assert (hotspot_consecutive_periods(fm)
+            == hotspot_consecutive_periods(orrm) == 2 * w.l)
+    assert (max_memory_requirement_bytes(w, fm)
+            == max_memory_requirement_bytes(w, orrm) == 1757184.0)
+
+
+def test_pinned_closed_form_transitions_nn_sweep():
+    """Table 1 FM closed form holds exactly on every paper benchmark."""
+    for nn in ("NN1", "NN2", "NN3"):
+        w, cfg, ms = _paper(nn)
+        mp = map_cores(w, cfg, MappingStrategy.FM, ms)
+        assert state_transitions(mp) == state_transitions_closed_form(mp)

@@ -1,0 +1,178 @@
+"""Schedule compiler: program structure, serialization, and the cost
+contract with core.simulator.simulate_epoch (ISSUE 6 acceptance: same
+2l-2 transition schedule, identical cost annotations, all strategies)."""
+
+import math
+
+import pytest
+
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.core.allocation import MappingStrategy
+from repro.core.planner import plan_fcnn, ring_mesh_axes
+from repro.core.simulator import ENoCBackend, ONoCBackend, simulate_epoch
+from repro.exec.program import (
+    Instruction,
+    Opcode,
+    PeriodProgram,
+    compile_fcnn_program,
+    compile_program,
+    snap_to_ring_degree,
+)
+
+N_DEV = 8
+STRATEGIES = list(MappingStrategy)
+
+
+def _compile(nn="NN1", batch=8, strategy="orrm", backend=None, n_dev=N_DEV):
+    w = workload(nn, batch_size=batch)
+    cfg = onoc_config(lambda_max=64)
+    prog = compile_fcnn_program(w, cfg, n_dev, strategy, backend=backend)
+    return w, cfg, prog
+
+
+# ----------------------------------------------------------------- structure
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("nn", ["NN1", "NN2"])
+def test_program_structure(nn, strategy):
+    w, cfg, prog = _compile(nn, strategy=strategy)
+    l = w.l
+    runs = prog.runs()
+    assert len(runs) == 2 * l
+    assert [r.period for r in runs] == list(range(1, 2 * l + 1))
+    sends = prog.sends()
+    recvs = [i for i in prog.instructions if i.opcode is Opcode.RECV]
+    assert len(sends) == 2 * l - 2 and len(recvs) == 2 * l - 2
+    # the simulator's schedule: periods {1..2l-1} minus the turnaround l
+    assert prog.transition_schedule() == [
+        i for i in range(1, 2 * l) if i != l]
+
+    for r in runs:
+        n_i = prog.layer_sizes[r.layer]
+        assert r.degree == len(r.devices) > 0
+        assert n_i % r.degree == 0 and N_DEV % r.degree == 0
+        assert r.chunk_width == n_i // r.degree
+        assert all(0 <= d < N_DEV for d in r.devices)
+        assert r.cost_s > 0
+    # Eq. 11 data locality: BP period windows mirror FP
+    by_period = {r.period: r for r in runs}
+    for i in range(1, l + 1):
+        assert by_period[i].devices == by_period[2 * l - i + 1].devices
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_free_matches_window_diffs(strategy):
+    w, cfg, prog = _compile("NN1", strategy=strategy)
+    runs = {r.period: r for r in prog.runs()}
+    frees = {f.period: f for f in prog.frees()}
+    for i in range(1, 2 * w.l):
+        released = sorted(set(runs[i].devices) - set(runs[i + 1].devices))
+        if released:
+            assert list(frees[i].devices) == released
+        else:
+            assert i not in frees
+    # epoch end: the whole final window is released
+    assert sorted(frees[2 * w.l].devices) == sorted(runs[2 * w.l].devices)
+
+
+def test_snap_to_ring_degree():
+    # divisors of both 8 and 500: {1, 2, 4}
+    assert snap_to_ring_degree(8, 8, 500) == 4
+    assert snap_to_ring_degree(1, 8, 500) == 1
+    assert snap_to_ring_degree(3, 8, 500) == 4    # log-tie prefers larger
+    assert snap_to_ring_degree(1000, 8, 1000) == 8
+    assert snap_to_ring_degree(5, 7, 10) == 1     # 7 shares no divisor >1
+
+
+def test_compile_resnap_from_foreign_mesh():
+    """A plan made for a bigger mesh compiles onto an 8-device ring."""
+    w = workload("NN1", batch_size=8)
+    cfg = onoc_config()
+    plan = plan_fcnn(w, cfg, {"data": 16, "model": 16}, strategy="rrm")
+    prog = compile_program(plan, w, cfg, N_DEV)
+    for r in prog.runs():
+        assert N_DEV % r.degree == 0
+        assert prog.layer_sizes[r.layer] % r.degree == 0
+
+
+def test_ring_mesh_axes_cover_divisors():
+    from repro.core.planner import feasible_degrees
+    for n in (1, 4, 8, 12, 60):
+        feas = feasible_degrees(ring_mesh_axes(n))
+        divisors = {d for d in range(1, n + 1) if n % d == 0}
+        assert divisors <= set(feas)
+        assert math.prod(ring_mesh_axes(n).values()) == n
+
+
+# -------------------------------------------------------------- cost contract
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("backend_cls", [ONoCBackend, ENoCBackend])
+@pytest.mark.parametrize("nn", ["NN1", "NN2"])
+def test_cost_annotation_matches_simulate_epoch(nn, strategy, backend_cls):
+    """The executable contract: program cost annotations == the simulator's
+    EpochTrace, transition by transition, for every mapping strategy on
+    both interconnect backends."""
+    backend = backend_cls()
+    w, cfg, prog = _compile(nn, strategy=strategy, backend=backend)
+    plan = plan_fcnn(w, cfg, ring_mesh_axes(N_DEV), strategy=strategy)
+    trace = simulate_epoch(w, cfg, mapping=plan.mapping, backend=backend)
+
+    assert prog.compute_s == trace.compute_s
+    assert prog.comm_s == trace.comm_s
+    sends = prog.sends()
+    assert len(sends) == len(trace.transitions) == 2 * w.l - 2
+    for ins, tr in zip(sends, trace.transitions):
+        assert ins.period == tr.period
+        assert ins.cost_s == tr.comm_s
+        assert ins.bytes_per_sender == tr.bytes_per_sender
+        assert ins.slots == tr.slots
+        assert ins.hop_bytes == tr.hop_bytes
+    # per-period compute agrees too
+    for r, f in zip(prog.runs(), trace.per_period_compute_s):
+        assert r.cost_s == f
+
+
+def test_onoc_period1_send_is_free_but_recorded():
+    w, cfg, prog = _compile("NN1", strategy="fm", backend=ONoCBackend())
+    first = prog.sends()[0]
+    assert first.period == 1
+    assert first.cost_s == 0.0
+    assert first.bytes_per_sender > 0
+
+
+def test_enoc_period1_send_is_paid():
+    w, cfg, prog = _compile("NN1", strategy="fm", backend=ENoCBackend())
+    first = prog.sends()[0]
+    assert first.period == 1
+    assert first.cost_s > 0.0
+
+
+# -------------------------------------------------------------- serialization
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_json_round_trip(strategy):
+    _, _, prog = _compile("NN2", strategy=strategy)
+    js = prog.to_json()
+    back = PeriodProgram.from_json(js)
+    assert back == prog
+    assert back.to_json() == js
+
+
+def test_json_version_guard():
+    _, _, prog = _compile()
+    bad = prog.to_json().replace('"version": 1', '"version": 99', 1)
+    with pytest.raises(ValueError):
+        PeriodProgram.from_json(bad)
+
+
+def test_instruction_constructors():
+    run = Instruction.RUN(period=1, layer=1, phase="fp",
+                          activation="sigmoid", onoc_cores=100, degree=4,
+                          chunk_width=250, window=(0, 1, 2, 3), cost_s=1.0)
+    assert run.opcode is Opcode.RUN and run.devices == (0, 1, 2, 3)
+    send = Instruction.SEND(period=1, senders=(0,), cost_s=0.5,
+                            bytes_per_sender=64.0, slots=2, hop_bytes=0.0)
+    assert send.opcode is Opcode.SEND and send.cost_s == 0.5
+    assert Instruction.RECV(period=1, receivers=(1,)).cost_s == 0.0
+    assert Instruction.FREE(period=1, released=(0,)).devices == (0,)

@@ -41,7 +41,7 @@ def test_resolve_spec_always_divides(dim, axis):
 
 
 def test_resolve_spec_demotes_prefix():
-    devs = np.array(jax.devices())
+    devs = np.array(jax.devices()[:1])
     mesh = Mesh(devs.reshape(1, 1), ("data", "model"))
     rules = AxisRules().override(activation_batch=("pod", "data"))
     # "pod" missing on this mesh: silently dropped
