@@ -7,15 +7,21 @@
 #                     (includes softmax_xent_microbench by default)
 #   make bench-gate   regression gate: fresh sweep diffed against the
 #                     committed BENCH_fcnn.json — fails on paper-claim
-#                     regressions or >20% microbench speedup drop
+#                     regressions or >20% median microbench speedup drop
+#   make fault-smoke  seeded device-loss replan-resume scenario on the
+#                     8-device CPU ring (the CI fault-smoke job)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench-smoke bench-json bench-gate
+.PHONY: verify bench-smoke bench-json bench-gate fault-smoke
 
 verify:
 	$(PY) -m pytest -x -q
+
+fault-smoke:
+	$(PY) examples/elastic_restart.py
+	$(PY) -m benchmarks.run --only fault_injection_bench
 
 bench-smoke:
 	$(PY) -m benchmarks.run --only table7_prediction

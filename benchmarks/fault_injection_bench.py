@@ -1,0 +1,145 @@
+"""Fault-injection benchmark: degraded-epoch pricing + a live seeded
+device-loss recovery scenario on the 8-device CPU ring.
+
+Two result families:
+
+  * pricing rows — ``expected_epoch_time`` on both backends for a paper
+    workload under a representative degradation mix (wavelength comb loss,
+    link degradation, straggling period) plus a 2-core device-loss burst:
+    nominal vs degraded vs expected epoch time, recovery overhead split
+    into prefix / re-transition / replanned-epoch terms.
+
+  * recovery row — a real ``DegradedModeRunner`` training run on forced
+    CPU host devices: a seeded mid-run device loss triggers replanning
+    (Lemma 1 on the survivors), program recompilation (statically
+    re-validated) and checkpoint-resume; the row records the structured
+    ``FaultReport`` and the max per-step loss deviation against a
+    from-scratch run on the surviving mesh — the reproduction check pins
+    it to fp tolerance (no sample skipped or repeated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+
+import numpy as np
+
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.core.simulator import ENoCBackend, ONoCBackend
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultKind,
+    FaultSchedule,
+    expected_epoch_time,
+)
+
+SEED = 0
+N_STEPS = 8
+N_DEVICES = 8
+SIZES = (32, 16, 8, 10)
+BATCH = 8
+
+
+def _pricing_rows() -> list[dict]:
+    w = workload("NN1", batch_size=64)
+    cfg = onoc_config(lambda_max=64)
+    schedule = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.WAVELENGTH_DEGRADE, step=0, magnitude=0.5),
+        FaultEvent(kind=FaultKind.LINK_DEGRADE, step=0, period=0,
+                   magnitude=0.5),
+        FaultEvent(kind=FaultKind.STRAGGLER, step=0, period=2,
+                   magnitude=2.0),
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=0),
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=1),
+    ), seed=SEED)
+    rows = []
+    for backend in (ONoCBackend(), ENoCBackend()):
+        pr = expected_epoch_time(w, cfg, schedule, step=0, backend=backend)
+        rows.append({
+            "case": f"NN1-{backend.name}",
+            "backend": backend.name,
+            "nominal_s": pr.nominal_s,
+            "degraded_s": pr.degraded_s,
+            "loss_period": pr.loss_period,
+            "survivors": pr.survivors,
+            "prefix_s": pr.prefix_s,
+            "re_transition_s": pr.re_transition_s,
+            "replanned_epoch_s": pr.replanned_epoch_s,
+            "expected_s": pr.expected_s,
+            "overhead_pct": pr.overhead_pct,
+        })
+    return rows
+
+
+def _recovery_row() -> dict:
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.checkpoint import Checkpointer
+    from repro.core.onoc_model import FCNNWorkload
+    from repro.data import Batcher, fcnn_classification_dataset
+    from repro.models import fcnn
+    from repro.optim import adam
+    from repro.runtime.degraded import DegradedModeRunner
+
+    cpu = jax.devices("cpu")
+    if len(cpu) < N_DEVICES:
+        return {"case": "device-loss-recovery", "skipped": True,
+                "reason": f"need {N_DEVICES} CPU devices, have {len(cpu)}"}
+
+    def mesh_factory(n: int) -> Mesh:
+        return Mesh(np.asarray(cpu[:n]), ("cores",))
+
+    w = FCNNWorkload(list(SIZES), batch_size=BATCH)
+    cfg = dataclasses.replace(onoc_config(lambda_max=64), m=N_DEVICES)
+    x, y = fcnn_classification_dataset(64, input_dim=SIZES[0], seed=3)
+    params0 = fcnn.init(jax.random.PRNGKey(0), list(SIZES))
+    opt = adam(1e-2)
+
+    schedule = FaultSchedule.seeded_device_loss(
+        SEED, n_steps=N_STEPS, n_devices=N_DEVICES, n_periods=2 * w.l)
+    lost = [e.device for e in schedule.events]
+    survivors = N_DEVICES - len(lost)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        runner = DegradedModeRunner(
+            workload=w, base_cfg=cfg, schedule=schedule,
+            checkpointer=Checkpointer(tmp), optimizer=opt,
+            n_devices=N_DEVICES, kernel_mode="ref", checkpoint_every=2,
+            backoff_s=0.0, mesh_factory=mesh_factory)
+        state, _, report = runner.run(
+            params0, opt.init(params0),
+            Batcher({"x": x, "y": y}, batch_size=BATCH), N_STEPS)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        scratch = DegradedModeRunner(
+            workload=w, base_cfg=dataclasses.replace(cfg, m=survivors),
+            schedule=FaultSchedule(), checkpointer=Checkpointer(tmp),
+            optimizer=opt, n_devices=survivors, kernel_mode="ref",
+            checkpoint_every=2, backoff_s=0.0, mesh_factory=mesh_factory)
+        _, _, _ = scratch.run(
+            params0, opt.init(params0),
+            Batcher({"x": x, "y": y}, batch_size=BATCH), N_STEPS)
+
+    max_diff = max(
+        abs(runner.losses[s] - scratch.losses[s]) for s in range(N_STEPS))
+    return {
+        "case": "device-loss-recovery",
+        "loss_step": schedule.events[0].step,
+        "loss_period": schedule.events[0].period,
+        "lost_devices": lost,
+        "survivors": survivors,
+        "replans": len(report.replans),
+        "resumed_from": report.resumed_from,
+        "steps_completed": int(state["step"]),
+        "max_loss_diff_vs_scratch": max_diff,
+        "recovered": (len(report.replans) == 1
+                      and int(state["step"]) == N_STEPS
+                      and max_diff < 1e-4),
+        "fault_report": report.to_dict(),
+    }
+
+
+def run() -> list[dict]:
+    return _pricing_rows() + [_recovery_row()]

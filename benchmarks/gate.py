@@ -11,17 +11,22 @@ when:
 
 Raw wall-clock fields are never compared — only speedup *ratios*, which
 are stable across machines since both sides of the ratio run on the same
-box.  After an intentional change (new checks, a real kernel win), refresh
-the baseline with ``make bench-json`` and commit the new snapshot.
+box.  Even ratios flake on loaded CPU runners, so when the gate runs the
+benchmarks itself it re-runs each microbench ``--repeats`` times (default
+3) and gates on the **median** speedup per case — a single noisy run can
+no longer fail (or pass) the gate.  After an intentional change (new
+checks, a real kernel win), refresh the baseline with ``make bench-json``
+and commit the new snapshot.
 
   PYTHONPATH=src python -m benchmarks.gate [--baseline BENCH_fcnn.json]
-      [--report PATH] [--slowdown 0.20]
+      [--report PATH] [--slowdown 0.20] [--repeats 3]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import subprocess
 import sys
 import tempfile
@@ -79,6 +84,34 @@ def compare(base: dict, cur: dict, slowdown: float) -> list[str]:
     return failures
 
 
+def merge_median_speedups(reports: list[dict]) -> dict:
+    """Flake dampening: replace each microbench row's speedup ratios with
+    the per-case median across ``reports``.  The first report supplies
+    everything else (checks, non-microbench rows)."""
+    merged = reports[0]
+    if len(reports) < 2:
+        return merged
+    for name, bench in merged.get("benchmarks", {}).items():
+        if not name.endswith("microbench"):
+            continue
+        samples: dict[tuple, list[float]] = {}
+        for rep in reports:
+            b = rep.get("benchmarks", {}).get(name)
+            if b is None:
+                continue
+            for row in b["rows"]:
+                for f in SPEEDUP_FIELDS:
+                    if f in row:
+                        samples.setdefault((row.get("case"), f),
+                                           []).append(row[f])
+        for row in bench["rows"]:
+            for f in SPEEDUP_FIELDS:
+                vals = samples.get((row.get("case"), f))
+                if vals:
+                    row[f] = statistics.median(vals)
+    return merged
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_fcnn.json")
@@ -87,21 +120,38 @@ def main() -> None:
                          "(default: run the benchmarks now)")
     ap.add_argument("--slowdown", type=float, default=0.20,
                     help="max tolerated microbench speedup-ratio drop")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="microbench re-runs; the gate compares the median "
+                         "speedup per case (only when running fresh)")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         base = json.load(f)
 
     if args.report:
-        report_path = args.report
+        with open(args.report) as f:
+            cur = json.load(f)
     else:
         report_path = tempfile.mktemp(suffix=".json", prefix="bench_gate_")
         print(f"# bench-gate: running benchmarks -> {report_path}")
         subprocess.run(
             [sys.executable, "-m", "benchmarks.run", "--json", report_path],
             check=True)
-    with open(report_path) as f:
-        cur = json.load(f)
+        with open(report_path) as f:
+            reports = [json.load(f)]
+        micro = [n for n in reports[0].get("benchmarks", {})
+                 if n.endswith("microbench")]
+        for rep in range(1, max(args.repeats, 1)):
+            for name in micro:
+                p = tempfile.mktemp(suffix=".json", prefix="bench_gate_")
+                print(f"# bench-gate: microbench repeat {rep + 1}/"
+                      f"{args.repeats}: {name}")
+                subprocess.run(
+                    [sys.executable, "-m", "benchmarks.run",
+                     "--only", name, "--json", p], check=True)
+                with open(p) as f:
+                    reports.append(json.load(f))
+        cur = merge_median_speedups(reports)
 
     failures = compare(base, cur, args.slowdown)
     if failures:

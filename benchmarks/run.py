@@ -18,13 +18,23 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
 
+# fault_injection_bench runs a real replan-resume scenario on an 8-device
+# CPU ring; the flag only multiplies the *host* platform's device count, so
+# it is set before any jax import and is harmless on TPU.
+_HOST_FLAG = "--xla_force_host_platform_device_count"
+if _HOST_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{_HOST_FLAG}=8 " + os.environ.get("XLA_FLAGS", "")).strip()
+
 from benchmarks import (  # noqa: E402
     exec_program_bench,
+    fault_injection_bench,
     fcnn_kernel_microbench,
     fig7_percore_sweep,
     fig10_onoc_vs_enoc,
@@ -46,6 +56,7 @@ BENCHMARKS = {
     "fcnn_kernel_microbench": fcnn_kernel_microbench.run,
     "softmax_xent_microbench": fcnn_kernel_microbench.run_softmax_xent,
     "exec_program_bench": exec_program_bench.run,
+    "fault_injection_bench": fault_injection_bench.run,
 }
 
 
@@ -157,6 +168,23 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
         out.append(f"check,exec,program cost annotations == simulate_epoch "
                    f"({len(rows)} programs, all strategies) -> "
                    f"{'PASS' if ok else 'FAIL'}")
+    if name == "fault_injection_bench":
+        pricing = [r for r in rows if "expected_s" in r]
+        ok = all(r["expected_s"] >= r["degraded_s"] >= r["nominal_s"] > 0
+                 for r in pricing)
+        out.append(f"check,faults,expected >= degraded >= nominal epoch time "
+                   f"on both backends -> {'PASS' if ok else 'FAIL'}")
+        rec = next(r for r in rows if r["case"] == "device-loss-recovery")
+        if rec.get("skipped"):
+            out.append(f"check,faults,device-loss replan+resume: skipped "
+                       f"({rec['reason']})")
+        else:
+            ok = rec["recovered"]
+            out.append(
+                f"check,faults,device-loss replan+resume matches "
+                f"from-scratch run on survivors "
+                f"(max loss diff {rec['max_loss_diff_vs_scratch']:.2e}) -> "
+                f"{'PASS' if ok else 'FAIL'}")
     if name == "fcnn_kernel_microbench":
         out.append(_microbench_check(rows, "fused fwd+bwd vs einsum"))
     if name == "softmax_xent_microbench":

@@ -310,6 +310,7 @@ def simulate_epoch(
     strategy: MappingStrategy | str = MappingStrategy.FM,
     cores_per_period: list[int] | None = None,
     backend: _Backend | None = None,
+    faults=None,
 ) -> EpochTrace:
     """Simulate one epoch: per-period compute + per-transition comm.
 
@@ -321,8 +322,19 @@ def simulate_epoch(
     sets g(m_1) = 0, folding it into Period-0 input loading — though its
     traffic is still recorded; on ENoC nothing is free and period 1 pays
     like every other transition.
+
+    ``faults`` (optional) is a degradation model, typically
+    ``runtime.faults.EpochFaults``, with three hooks:
+    ``apply_config(cfg)`` (wavelength loss shrinks the usable comb),
+    ``compute_scale(period)`` (straggling cores inflate compute), and
+    ``apply_transition(traffic, period)`` (degraded links inflate drain).
+    Degradation never changes *what* is scheduled, only its price; the
+    ONoC period-1 free hand-off stays free (Eq. 6 is a scheduling
+    convention, not a bandwidth property).
     """
     backend = backend or ONoCBackend()
+    if faults is not None:
+        cfg = faults.apply_config(cfg)
     if mapping is None:
         mapping = map_cores(workload, cfg, strategy, cores_per_period)
     l = workload.l
@@ -332,6 +344,8 @@ def simulate_epoch(
     for i in range(1, 2 * l + 1):
         m_i = len(mapping.window(i))
         f = compute_time(workload, cfg, i, m_i)
+        if faults is not None:
+            f *= faults.compute_scale(i)
         per_period_compute.append(f)
         busy[list(mapping.window(i))] += f
 
@@ -341,6 +355,8 @@ def simulate_epoch(
         if i == l:
             continue
         tr = backend.transition_time(workload, cfg, i, mapping)
+        if faults is not None:
+            tr = faults.apply_transition(tr, i)
         if backend.name == "onoc" and i == 1:
             # Eq. (6): g(m_1) = 0 — the ONoC model folds the period-1
             # hand-off into Period 0 loading.  Record traffic, zero time.

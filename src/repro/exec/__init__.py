@@ -26,6 +26,10 @@ from repro.exec.runtime import (  # noqa: F401
     ProgramExecutor,
     build_train_step,
 )
+from repro.exec.validate import (  # noqa: F401
+    ProgramValidationError,
+    validate_program,
+)
 
 __all__ = [
     "Opcode",
@@ -35,4 +39,6 @@ __all__ = [
     "compile_fcnn_program",
     "ProgramExecutor",
     "build_train_step",
+    "ProgramValidationError",
+    "validate_program",
 ]

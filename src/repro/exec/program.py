@@ -230,6 +230,7 @@ def compile_program(
     cfg: ONoCConfig,
     n_devices: int,
     backend=None,
+    validate: bool = True,
 ) -> PeriodProgram:
     """Lower a planner plan + its mapping into a PeriodProgram.
 
@@ -238,6 +239,13 @@ def compile_program(
     the same strategy re-run on the n-device ring (``map_cores`` with
     m=n_devices) supplies the executor windows, so FM/RRM/ORRM remapping is
     *executed*, not just priced.
+
+    Every emitted program is statically verified (``exec.validate``) before
+    it is returned — schedule invariants plus the cost contract against the
+    simulator — so a miscompiled or corrupted schedule is a hard error at
+    compile time, never silent wrong numerics at execution time.  Pass
+    ``validate=False`` only to construct intentionally-broken programs
+    (validator tests).
     """
     backend = backend or ONoCBackend()
     l = workload.l
@@ -291,7 +299,7 @@ def compile_program(
         if released:
             instrs.append(Instruction.FREE(period=i, released=released))
 
-    return PeriodProgram(
+    program = PeriodProgram(
         layer_sizes=tuple(int(n) for n in workload.layer_sizes),
         batch_size=workload.batch_size,
         strategy=MappingStrategy(plan.strategy).value,
@@ -301,6 +309,10 @@ def compile_program(
         degrees=degrees,
         instructions=tuple(instrs),
     )
+    if validate:
+        from repro.exec.validate import validate_program
+        validate_program(program, workload, cfg, backend=backend)
+    return program
 
 
 def compile_fcnn_program(

@@ -114,14 +114,29 @@ class ProgramExecutor:
                 owner_chunk=owner,
             ))
 
+        self._rebuild()
+
+    def _rebuild(self) -> None:
         self._sharded = shard_map(
-            self._device_program, mesh=mesh,
+            self._device_program, mesh=self.mesh,
             in_specs=(P(), P(), P()), out_specs=P(),
             # loss is replicated by construction (identical full logits on
             # every device after the final gather); collective use below is
             # beyond what the static replication checker can verify.
             check_rep=False,
         )
+
+    def degrade(self, mode: str = "ref") -> str:
+        """Graceful degradation: swap the kernel dispatch (typically fused
+        Pallas -> jnp reference path) after a kernel failure and rebuild
+        the sharded interpreter.  Returns the previous mode.  Callers
+        holding a jitted step around the old ``loss_fn`` must rebuild it —
+        the degraded-mode runner (runtime/degraded.py) does, and records
+        the fallback in its FaultReport."""
+        previous = self.kernel_mode
+        self.kernel_mode = ops.resolve_mode(mode)
+        self._rebuild()
+        return previous
 
     # ------------------------------------------------------------- interpret
 

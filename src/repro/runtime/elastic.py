@@ -34,6 +34,25 @@ class ElasticPlanner:
         mapping = map_cores(self.workload, cfg, self.strategy, cores)
         return cfg, cores, mapping
 
+    def replan_program(self, n_devices: int, backend=None):
+        """Degraded-mode replan: Lemma-1 plan on the surviving ring plus a
+        freshly compiled (and statically validated) period program for it.
+
+        Returns ``(cfg, plan, program)`` where ``cfg`` is the base config
+        shrunk to ``n_devices`` cores.  ``compile_program`` re-runs the
+        static verifier on the new schedule, so a bad replan is a hard
+        ``ProgramValidationError`` before anything executes.
+        """
+        from repro.core.planner import plan_fcnn, ring_mesh_axes
+        from repro.exec.program import compile_program
+
+        cfg = dataclasses.replace(self.base_cfg, m=n_devices)
+        plan = plan_fcnn(self.workload, cfg, ring_mesh_axes(n_devices),
+                         strategy=self.strategy)
+        program = compile_program(plan, self.workload, cfg, n_devices,
+                                  backend=backend)
+        return cfg, plan, program
+
     def make_mesh(self, devices=None, axis: str = "data") -> Mesh:
         devices = devices if devices is not None else jax.devices()
         return Mesh(np.asarray(devices), (axis,))

@@ -31,8 +31,12 @@ class StragglerMonitor:
     deadline_factor: float = 3.0
     window: int = 32
     on_straggler: Callable[[int, float, float], None] | None = None
-    _times: deque = dataclasses.field(default_factory=lambda: deque(maxlen=32))
+    _times: deque = dataclasses.field(default_factory=deque)
     straggler_steps: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        # honor the configured window (the deque default can't see it)
+        self._times = deque(self._times, maxlen=self.window)
 
     def observe(self, step: int, duration_s: float) -> bool:
         is_straggler = False
@@ -57,6 +61,11 @@ class TrainingSupervisor:
     backoff_s: float = 0.1
     straggler: StragglerMonitor = dataclasses.field(
         default_factory=StragglerMonitor)
+    # Exception types the retry/restart loop must NOT swallow: they
+    # propagate to the caller immediately.  The degraded-mode runner passes
+    # (DeviceLossFault,) here — a lost device cannot be retried away, it
+    # needs a replan + recompile (runtime/degraded.py).
+    fatal: tuple[type, ...] = ()
 
     def latest(self) -> int | None:
         return latest_step(self.checkpointer.directory)
@@ -93,7 +102,9 @@ class TrainingSupervisor:
                     state, metrics = step_fn(state, batch)
                     dt = time.monotonic() - t0
                     break
-                except Exception:                        # noqa: BLE001
+                except Exception as e:                   # noqa: BLE001
+                    if isinstance(e, self.fatal):
+                        raise
                     attempt += 1
                     if attempt > self.max_retries:
                         # final fallback: restart from latest checkpoint

@@ -1,0 +1,203 @@
+"""Fault-tolerance plumbing (ISSUE 7 satellites): StragglerMonitor window
+regression, TrainingSupervisor fatal passthrough, checkpoint
+crash-atomicity, and ElasticPlanner membership-change coverage."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.core.onoc_model import FCNNWorkload
+from repro.core.simulator import simulate_epoch
+from repro.runtime.elastic import ElasticPlanner
+from repro.runtime.fault_tolerance import StragglerMonitor, TrainingSupervisor
+from repro.runtime.faults import DeviceLossFault
+
+
+# ------------------------------------------------------------- straggler
+
+
+def test_straggler_monitor_honors_window():
+    """Regression: ``window`` was ignored (the deque default hardcoded
+    maxlen=32), so a configured window never took effect."""
+    mon = StragglerMonitor(window=8)
+    assert mon._times.maxlen == 8
+    for i in range(100):
+        mon.observe(i, 1.0)
+    assert len(mon._times) == 8
+
+    big = StragglerMonitor(window=64)
+    assert big._times.maxlen == 64
+    for i in range(100):
+        big.observe(i, 1.0)
+    assert len(big._times) == 64
+
+
+def test_straggler_window_affects_detection():
+    """A short window forgets the fast history: after enough slow steps the
+    median catches up and the same duration stops counting as straggling."""
+    short = StragglerMonitor(window=8, deadline_factor=2.0)
+    for i in range(8):
+        short.observe(i, 0.1)
+    flags = [short.observe(8 + i, 1.0) for i in range(6)]
+    assert flags[0] is True          # 1.0 vs median 0.1
+    assert flags[-1] is False        # slow steps now dominate the window
+    long = StragglerMonitor(window=32, deadline_factor=2.0)
+    for i in range(8):
+        long.observe(i, 0.1)
+    flags = [long.observe(8 + i, 1.0) for i in range(6)]
+    assert all(flags)                # 32-window median still 0.1
+
+
+# ------------------------------------------------------------ supervisor
+
+
+def _batches():
+    while True:
+        yield {"x": 0}
+
+
+def test_supervisor_fatal_exceptions_propagate():
+    with tempfile.TemporaryDirectory() as tmp:
+        sup = TrainingSupervisor(Checkpointer(tmp), checkpoint_every=0,
+                                 max_retries=5, backoff_s=0.0,
+                                 fatal=(DeviceLossFault,))
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            calls["n"] += 1
+            raise DeviceLossFault(0, 1, (3,))
+
+        with pytest.raises(DeviceLossFault):
+            sup.run({"w": jnp.zeros(())}, step_fn, _batches(), 4)
+        assert calls["n"] == 1           # no retry of a fatal fault
+
+
+def test_supervisor_still_retries_non_fatal():
+    with tempfile.TemporaryDirectory() as tmp:
+        sup = TrainingSupervisor(Checkpointer(tmp), checkpoint_every=0,
+                                 max_retries=3, backoff_s=0.0,
+                                 fatal=(DeviceLossFault,))
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise RuntimeError("transient")
+            return state, {}
+
+        state, hist = sup.run({"w": jnp.zeros(())}, step_fn, _batches(), 1)
+        assert calls["n"] == 3 and len(hist) == 1
+
+
+# ------------------------------------------------- checkpoint atomicity
+
+
+def _state(v: float):
+    return {"w": jnp.full((4,), v), "step": jnp.asarray(int(v), jnp.int32)}
+
+
+def test_checkpoint_crash_atomicity(monkeypatch):
+    """A crash mid-write (partial temp dir) must not corrupt the latest
+    checkpoint: latest_step resolves to the previous complete step and
+    restart succeeds."""
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, keep=3)
+        ck.save(1, _state(1.0), blocking=True)
+        assert latest_step(tmp) == 1
+
+        # kill the write mid-flight: np.save succeeds for the first leaf
+        # then dies, leaving a partial tmp.3 and no step_3
+        real_save = np.save
+        calls = {"n": 0}
+
+        def dying_save(path, arr):
+            calls["n"] += 1
+            if calls["n"] >= 2:
+                raise OSError("simulated crash mid-write")
+            real_save(path, arr)
+
+        monkeypatch.setattr(np, "save", dying_save)
+        with pytest.raises(OSError):
+            ck.save(3, _state(3.0), blocking=True)
+        monkeypatch.setattr(np, "save", real_save)
+
+        assert os.path.isdir(os.path.join(tmp, "tmp.3"))      # the corpse
+        assert not os.path.isdir(os.path.join(tmp, "step_3"))
+        assert latest_step(tmp) == 1                          # unharmed
+
+        restored = ck.restore(1, _state(0.0))
+        np.testing.assert_array_equal(restored["w"], np.full((4,), 1.0))
+        assert int(restored["step"]) == 1
+
+        # restart path: the next save at the same step works fine
+        ck2 = Checkpointer(tmp, keep=3)
+        ck2.save(3, _state(3.0), blocking=True)
+        assert latest_step(tmp) == 3
+
+
+def test_async_crash_leaves_previous_checkpoint(monkeypatch):
+    """Same contract for the async path: a background writer that dies
+    leaves latest_step at the previous complete checkpoint."""
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, keep=3)
+        ck.save(2, _state(2.0), blocking=True)
+
+        def always_die(path, arr):
+            raise OSError("simulated crash mid-write")
+
+        monkeypatch.setattr(np, "save", always_die)
+        ck.save(4, _state(4.0), blocking=False)
+        ck.wait()      # thread died; its exception stays in the thread
+        assert latest_step(tmp) == 2
+
+
+# ------------------------------------------------------ elastic shrink
+
+
+def test_elastic_shrink_degrees_stay_feasible():
+    """8 -> 6 -> 4 devices: every replanned program has divisor-feasible
+    degrees on the shrunken ring and validates."""
+    w = FCNNWorkload([32, 16, 8, 10], batch_size=8)
+    planner = ElasticPlanner(w, dataclasses.replace(onoc_config(), m=8))
+    for n in (8, 6, 4):
+        cfg, plan, program = planner.replan_program(n)
+        assert cfg.m == n and program.n_devices == n
+        for i, d in enumerate(program.degrees, start=1):
+            assert n % d == 0, f"{n} devices: degree {d} not a divisor"
+            assert w.n(i) % d == 0
+        for run in program.runs():
+            assert all(0 <= dev < n for dev in run.devices)
+
+
+def test_elastic_shrink_lemma1_monotone():
+    """Lemma 1: the optimal epoch time can only get worse as cores are
+    taken away (the feasible allocation set shrinks)."""
+    w = workload("NN1", batch_size=64)
+    base = onoc_config(lambda_max=64)
+    planner = ElasticPlanner(w, base)
+    times = []
+    for m in (1000, 500, 100, 8, 6, 4):
+        cfg, cores, _ = planner.plan_for(m)
+        tr = simulate_epoch(w, cfg, cores_per_period=cores)
+        times.append(tr.total_s)
+        assert max(cores) <= m
+    assert times == sorted(times), (
+        f"epoch time not monotone in shrinking core count: {times}")
+
+
+def test_elastic_replan_program_costs_match_simulator():
+    """The replanned program's cost annotations equal simulate_epoch on the
+    shrunken config (the validator's cost contract, end to end)."""
+    w = FCNNWorkload([32, 16, 8, 10], batch_size=8)
+    planner = ElasticPlanner(w, dataclasses.replace(onoc_config(), m=8))
+    for n in (6, 4):
+        cfg, plan, program = planner.replan_program(n)
+        tr = simulate_epoch(w, cfg,
+                            cores_per_period=list(program.onoc_cores))
+        assert program.total_s == pytest.approx(tr.total_s, rel=1e-12)

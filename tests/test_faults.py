@@ -1,0 +1,184 @@
+"""Fault schedules, runtime injection, and fault-aware epoch pricing
+(ISSUE 7 tentpole: src/repro/runtime/faults.py)."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.core.simulator import ENoCBackend, ONoCBackend, simulate_epoch
+from repro.exec.program import compile_fcnn_program, Opcode
+from repro.runtime.faults import (
+    DeviceLossFault,
+    EpochFaults,
+    FaultEvent,
+    FaultInjector,
+    FaultKind,
+    FaultSchedule,
+    TransientRunFault,
+    expected_epoch_time,
+)
+
+
+W = workload("NN1", batch_size=64)
+CFG = onoc_config(lambda_max=64)
+
+
+# ----------------------------------------------------------------- schedules
+
+
+def test_sample_is_deterministic():
+    rates = {FaultKind.TRANSIENT_RUN: 0.3, FaultKind.STRAGGLER: 0.3,
+             FaultKind.DEVICE_LOSS: 0.1}
+    a = FaultSchedule.sample(7, n_steps=50, n_devices=8, n_periods=6,
+                             rates=rates)
+    b = FaultSchedule.sample(7, n_steps=50, n_devices=8, n_periods=6,
+                             rates=rates)
+    assert a.events == b.events and len(a.events) > 0
+    c = FaultSchedule.sample(8, n_steps=50, n_devices=8, n_periods=6,
+                             rates=rates)
+    assert c.events != a.events
+
+
+def test_seeded_device_loss_is_mid_run_and_replayable():
+    for seed in range(20):
+        s = FaultSchedule.seeded_device_loss(seed, n_steps=30, n_devices=8,
+                                             n_periods=6, n_lost=2)
+        assert s.events == FaultSchedule.seeded_device_loss(
+            seed, n_steps=30, n_devices=8, n_periods=6, n_lost=2).events
+        assert len(s.events) == 2
+        devs = [e.device for e in s.events]
+        assert len(set(devs)) == 2           # without replacement
+        for e in s.events:
+            assert 10 <= e.step <= 20        # middle third
+            assert 1 <= e.period <= 6
+            assert e.kind is FaultKind.DEVICE_LOSS
+
+
+def test_at_filters_by_step_and_period():
+    ev = (FaultEvent(kind=FaultKind.STRAGGLER, step=3, period=2),
+          FaultEvent(kind=FaultKind.STRAGGLER, step=3, period=4),
+          FaultEvent(kind=FaultKind.STRAGGLER, step=5, period=2))
+    s = FaultSchedule(events=ev)
+    assert s.at(3) == ev[:2]
+    assert s.at(3, period=4) == (ev[1],)
+    assert s.at(4) == ()
+
+
+# ------------------------------------------------------------------ injector
+
+
+def _program_instrs():
+    prog = compile_fcnn_program(W, CFG, 8, "orrm")
+    return prog.instructions
+
+
+def test_transient_fires_exactly_count_times():
+    instrs = _program_instrs()
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=1,
+                   device=0, count=2),))
+    inj = FaultInjector(sched)
+
+    def attempt():
+        for ins in instrs:
+            inj.instruction_boundary(0, ins)
+
+    with pytest.raises(TransientRunFault):
+        attempt()
+    with pytest.raises(TransientRunFault):
+        attempt()
+    attempt()  # count exhausted: clean pass
+    assert inj.report.retries == 2
+    assert len(inj.report.fired) == 2
+
+
+def test_device_losses_aggregate_into_one_fault():
+    instrs = _program_instrs()
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=2, period=1, device=6),
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=2, period=1, device=7),))
+    inj = FaultInjector(sched)
+    for ins in instrs:           # step without the fault: nothing fires
+        inj.instruction_boundary(0, ins)
+    with pytest.raises(DeviceLossFault) as ei:
+        for ins in instrs:
+            inj.instruction_boundary(2, ins)
+    assert ei.value.devices == (6, 7)
+    assert ei.value.step == 2 and ei.value.period == 1
+
+
+def test_period_zero_fires_at_first_run_boundary():
+    instrs = _program_instrs()
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=0),))
+    inj = FaultInjector(sched)
+    first = next(i for i in instrs if i.opcode is Opcode.RUN)
+    with pytest.raises(TransientRunFault):
+        inj.instruction_boundary(0, first)
+
+
+def test_timeout_hook():
+    fired = []
+    inj = FaultInjector(FaultSchedule(), timeout_s=0.5,
+                        on_timeout=lambda s, d: fired.append((s, d)))
+    inj.observe_step(0, 0.1)
+    inj.observe_step(1, 0.9)
+    assert inj.report.timeouts == 1 and fired == [(1, 0.9)]
+
+
+# ------------------------------------------------------------------- pricing
+
+
+@pytest.mark.parametrize("backend", [ONoCBackend(), ENoCBackend()])
+def test_degradations_inflate_epoch_price(backend):
+    nominal = simulate_epoch(W, CFG, backend=backend)
+    for ef in (EpochFaults(wavelength_loss=0.5),
+               EpochFaults(link_degrade={0: 0.5}),
+               EpochFaults(straggle={0: 2.0})):
+        deg = simulate_epoch(W, CFG, backend=backend, faults=ef)
+        if ef.wavelength_loss and backend.name == "enoc":
+            continue  # ENoC has no WDM comb to lose
+        assert deg.total_s > nominal.total_s
+    # no-fault EpochFaults is exactly the nominal price
+    same = simulate_epoch(W, CFG, backend=backend, faults=EpochFaults())
+    assert same.total_s == nominal.total_s
+
+
+def test_straggler_scales_only_its_period():
+    ef = EpochFaults(straggle={2: 3.0})
+    nominal = simulate_epoch(W, CFG)
+    deg = simulate_epoch(W, CFG, faults=ef)
+    for p, (a, b) in enumerate(zip(nominal.per_period_compute_s,
+                                   deg.per_period_compute_s), start=1):
+        if p == 2:
+            assert b == pytest.approx(3.0 * a)
+        else:
+            assert b == a
+
+
+@pytest.mark.parametrize("backend", [ONoCBackend(), ENoCBackend()])
+def test_expected_epoch_time_decomposition(backend):
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=0),
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=1),))
+    pr = expected_epoch_time(W, CFG, sched, step=0, backend=backend)
+    assert pr.survivors == CFG.m - 2
+    assert pr.loss_period == 3
+    assert pr.expected_s == pytest.approx(
+        pr.prefix_s + pr.re_transition_s + pr.replanned_epoch_s)
+    assert pr.expected_s > pr.nominal_s > 0
+    assert pr.overhead_pct > 0
+    # no device loss: expected == degraded
+    pr0 = expected_epoch_time(W, CFG, FaultSchedule(), backend=backend)
+    assert pr0.expected_s == pr0.degraded_s == pr0.nominal_s
+    assert pr0.loss_period is None
+
+
+def test_expected_epoch_time_rejects_total_loss():
+    cfg = dataclasses.replace(CFG, m=2)
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=1, device=0),
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=1, device=1),))
+    with pytest.raises(ValueError, match="no surviving cores"):
+        expected_epoch_time(W, cfg, sched, step=0)
