@@ -36,6 +36,8 @@ def run() -> list[dict]:
                 "runs": len(prog.runs()),
                 "sends": len(prog.sends()),
                 "frees": len(prog.frees()),
+                "window_frees": len(prog.frees("window")),
+                "param_frees": len(prog.frees("param")),
                 "json_bytes": len(prog.to_json()),
                 "compile_us": compile_us,
                 "program_total_s": prog.total_s,

@@ -1,0 +1,125 @@
+"""Weight-sharded residency benchmark (ISSUE 8 tentpole).
+
+Two result families on the 8-device executor ring:
+
+  * tracker rows — for each paper workload, walk the compiled ORRM
+    program's residency annotations (``exec.residency.ResidencyTracker``)
+    and check the tentpole claim statically: max per-device peak live
+    parameter bytes <= 1.1 x replicated-model bytes / d (d = the smallest
+    FP parallelism degree — a safe upper bound for mixed-degree rings),
+    param FREEs release at exactly the Eq.-11 BP mirror periods, and the
+    ledger drains to zero by period 2l.
+
+  * timed row — a real sharded vs replicated ``Executable.train_step``
+    on forced CPU host devices (kernel_mode="ref"): per-step wall time in
+    both residency modes and their ratio ``replicated_over_sharded_step``
+    (gated by benchmarks.gate — both sides run on the same box, so the
+    ratio is stable where raw wall time is not), plus a bit-match check
+    that the sharded loss equals the replicated oracle exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.exec.program import compile_fcnn_program
+from repro.exec.residency import ResidencyTracker, replicated_model_bytes
+
+N_DEV = 8
+TIMED_SIZES = (128, 64, 32, 10)
+TIMED_BATCH = 32
+N_WARMUP = 3
+N_TIMED = 20
+
+
+def _tracker_rows() -> list[dict]:
+    cfg = onoc_config(lambda_max=64)
+    rows = []
+    for nn in ("NN1", "NN2"):
+        w = workload(nn, batch_size=64)
+        prog = compile_fcnn_program(w, cfg, N_DEV, "orrm")
+        tr = ResidencyTracker(prog, mode="sharded")
+        full = replicated_model_bytes(prog)
+        d_min = min(r.degree for r in prog.runs("fp"))
+        peak = max(tr.peak_bytes())
+        # layer i is dropped after its BP mirror period 2l-i+1, i.e. the
+        # sharded tracker must release at every BP period l+1 .. 2l
+        releases = tr.release_periods()
+        free_ok = (releases == list(range(w.l + 1, 2 * w.l + 1))
+                   and all(b == 0.0 for b in tr.final_bytes()))
+        rows.append({
+            "case": f"{nn.lower()}_residency",
+            "nn": nn,
+            "n_devices": N_DEV,
+            "schema_version": prog.version,
+            "replicated_bytes": full,
+            "sharded_peak_bytes": peak,
+            "peak_ratio": tr.peak_ratio(),
+            "min_fp_degree": d_min,
+            "peak_ok": bool(peak <= 1.1 * full / d_min),
+            "release_periods": releases,
+            "free_ok": free_ok,
+        })
+    return rows
+
+
+def _timed_row() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    import repro.exec as rexec
+    from repro.core.onoc_model import FCNNWorkload
+    from repro.data import fcnn_classification_dataset
+    from repro.optim import adam
+
+    cpu = jax.devices("cpu")
+    if len(cpu) < N_DEV:
+        return {"case": "timed_step", "skipped": True,
+                "reason": f"need {N_DEV} CPU devices, have {len(cpu)}"}
+    mesh = Mesh(np.asarray(cpu[:N_DEV]), ("cores",))
+
+    w = FCNNWorkload(list(TIMED_SIZES), batch_size=TIMED_BATCH)
+    cfg = dataclasses.replace(onoc_config(lambda_max=64), m=N_DEV)
+    x, y = fcnn_classification_dataset(256, input_dim=TIMED_SIZES[0], seed=0)
+    batch = {"x": jnp.asarray(x[:TIMED_BATCH]),
+             "y": jnp.asarray(y[:TIMED_BATCH])}
+    opt = adam(1e-3)
+
+    def _time_mode(residency: str) -> tuple[float, float]:
+        exe = rexec.compile(w, cfg, mesh, strategy="orrm",
+                            residency=residency, kernel_mode="ref")
+        state = exe.init_state(jax.random.PRNGKey(0), opt)
+        step = exe.train_step(opt)
+        loss = 0.0
+        for _ in range(N_WARMUP):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(N_TIMED):
+            state, metrics = step(state, batch)
+            loss = metrics["loss"]
+        jax.block_until_ready(state)
+        us = 1e6 * (time.perf_counter() - t0) / N_TIMED
+        return us, float(loss)
+
+    sharded_us, sharded_loss = _time_mode("sharded")
+    repl_us, repl_loss = _time_mode("replicated")
+    return {
+        "case": "timed_step",
+        "n_devices": N_DEV,
+        "sizes": list(TIMED_SIZES),
+        "batch": TIMED_BATCH,
+        "steps": N_TIMED,
+        "sharded_step_us": sharded_us,
+        "replicated_step_us": repl_us,
+        "replicated_over_sharded_step": repl_us / sharded_us,
+        "loss_bitmatch": bool(sharded_loss == repl_loss),
+    }
+
+
+def run() -> list[dict]:
+    return _tracker_rows() + [_timed_row()]

@@ -5,9 +5,10 @@ Two result families:
 
   * pricing rows — ``expected_epoch_time`` on both backends for a paper
     workload under a representative degradation mix (wavelength comb loss,
-    link degradation, straggling period) plus a 2-core device-loss burst:
-    nominal vs degraded vs expected epoch time, recovery overhead split
-    into prefix / re-transition / replanned-epoch terms.
+    link degradation, straggling period, a transient RUN retry) plus a
+    2-core device-loss burst: nominal vs degraded vs expected epoch time,
+    recovery overhead split into prefix / retry / re-transition /
+    replanned-epoch terms.
 
   * recovery row — a real ``DegradedModeRunner`` training run on forced
     CPU host devices: a seeded mid-run device loss triggers replanning
@@ -50,6 +51,8 @@ def _pricing_rows() -> list[dict]:
                    magnitude=0.5),
         FaultEvent(kind=FaultKind.STRAGGLER, step=0, period=2,
                    magnitude=2.0),
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=2,
+                   device=2, count=1),
         FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=0),
         FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=1),
     ), seed=SEED)
@@ -66,6 +69,8 @@ def _pricing_rows() -> list[dict]:
             "prefix_s": pr.prefix_s,
             "re_transition_s": pr.re_transition_s,
             "replanned_epoch_s": pr.replanned_epoch_s,
+            "retry_s": pr.retry_s,
+            "retries": pr.retries,
             "expected_s": pr.expected_s,
             "overhead_pct": pr.overhead_pct,
         })

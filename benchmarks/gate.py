@@ -6,15 +6,18 @@ when:
 
   * a reproduction check that PASSed in the baseline now FAILs or has
     disappeared from the report (deleting a check is a regression too), or
-  * a microbench speedup ratio (fused vs reference implementation)
-    degrades by more than ``--slowdown`` (default 20%).
+  * a gated timing ratio degrades by more than ``--slowdown`` (default
+    20%) — the microbench speedups (fused vs reference implementation)
+    and the executor's program-execution wall-time ratio
+    (``exec_residency_bench``'s replicated-over-sharded step time, see
+    ``_ratio_fields``).
 
-Raw wall-clock fields are never compared — only speedup *ratios*, which
+Raw wall-clock fields are never compared — only timing *ratios*, which
 are stable across machines since both sides of the ratio run on the same
 box.  Even ratios flake on loaded CPU runners, so when the gate runs the
-benchmarks itself it re-runs each microbench ``--repeats`` times (default
-3) and gates on the **median** speedup per case — a single noisy run can
-no longer fail (or pass) the gate.  After an intentional change (new
+benchmarks itself it re-runs each ratio-gated benchmark ``--repeats``
+times (default 3) and gates on the **median** ratio per case — a single
+noisy run can no longer fail (or pass) the gate.  After an intentional change (new
 checks, a real kernel win), refresh the baseline with ``make bench-json``
 and commit the new snapshot.
 
@@ -31,7 +34,15 @@ import subprocess
 import sys
 import tempfile
 
-SPEEDUP_FIELDS = ("fwd_speedup", "fwdbwd_speedup")
+def _ratio_fields(name: str) -> tuple[str, ...]:
+    """Gated ratio fields per benchmark.  Only ratios are compared across
+    reports (both sides of a ratio run on the same box); benchmarks not
+    listed here contribute checks but no timing gate."""
+    if name.endswith("microbench"):
+        return ("fwd_speedup", "fwdbwd_speedup")
+    if name == "exec_residency_bench":
+        return ("replicated_over_sharded_step",)
+    return ()
 
 
 def _check_key(line: str) -> str:
@@ -63,11 +74,12 @@ def compare(base: dict, cur: dict, slowdown: float) -> list[str]:
             failures.append(f"paper-claim regression: {now}")
 
     for name, bench in base.get("benchmarks", {}).items():
-        if not name.endswith("microbench"):
+        fields = _ratio_fields(name)
+        if not fields:
             continue
         cur_bench = cur.get("benchmarks", {}).get(name)
         if cur_bench is None:
-            failures.append(f"microbench disappeared: {name}")
+            failures.append(f"gated benchmark disappeared: {name}")
             continue
         cur_rows = {r.get("case"): r for r in cur_bench["rows"]}
         for row in bench["rows"]:
@@ -76,7 +88,7 @@ def compare(base: dict, cur: dict, slowdown: float) -> list[str]:
             if now is None:
                 failures.append(f"{name}: case {case!r} disappeared")
                 continue
-            for f in SPEEDUP_FIELDS:
+            for f in fields:
                 if f in row and f in now and now[f] < (1 - slowdown) * row[f]:
                     failures.append(
                         f"{name}/{case}: {f} {row[f]:.3f} -> {now[f]:.3f} "
@@ -85,14 +97,15 @@ def compare(base: dict, cur: dict, slowdown: float) -> list[str]:
 
 
 def merge_median_speedups(reports: list[dict]) -> dict:
-    """Flake dampening: replace each microbench row's speedup ratios with
+    """Flake dampening: replace each ratio-gated row's timing ratios with
     the per-case median across ``reports``.  The first report supplies
-    everything else (checks, non-microbench rows)."""
+    everything else (checks, ungated rows)."""
     merged = reports[0]
     if len(reports) < 2:
         return merged
     for name, bench in merged.get("benchmarks", {}).items():
-        if not name.endswith("microbench"):
+        fields = _ratio_fields(name)
+        if not fields:
             continue
         samples: dict[tuple, list[float]] = {}
         for rep in reports:
@@ -100,12 +113,12 @@ def merge_median_speedups(reports: list[dict]) -> dict:
             if b is None:
                 continue
             for row in b["rows"]:
-                for f in SPEEDUP_FIELDS:
+                for f in fields:
                     if f in row:
                         samples.setdefault((row.get("case"), f),
                                            []).append(row[f])
         for row in bench["rows"]:
-            for f in SPEEDUP_FIELDS:
+            for f in fields:
                 vals = samples.get((row.get("case"), f))
                 if vals:
                     row[f] = statistics.median(vals)
@@ -139,12 +152,12 @@ def main() -> None:
             check=True)
         with open(report_path) as f:
             reports = [json.load(f)]
-        micro = [n for n in reports[0].get("benchmarks", {})
-                 if n.endswith("microbench")]
+        gated = [n for n in reports[0].get("benchmarks", {})
+                 if _ratio_fields(n)]
         for rep in range(1, max(args.repeats, 1)):
-            for name in micro:
+            for name in gated:
                 p = tempfile.mktemp(suffix=".json", prefix="bench_gate_")
-                print(f"# bench-gate: microbench repeat {rep + 1}/"
+                print(f"# bench-gate: timing-gated repeat {rep + 1}/"
                       f"{args.repeats}: {name}")
                 subprocess.run(
                     [sys.executable, "-m", "benchmarks.run",

@@ -34,6 +34,7 @@ if _HOST_FLAG not in os.environ.get("XLA_FLAGS", ""):
 
 from benchmarks import (  # noqa: E402
     exec_program_bench,
+    exec_residency_bench,
     fault_injection_bench,
     fcnn_kernel_microbench,
     fig7_percore_sweep,
@@ -56,6 +57,7 @@ BENCHMARKS = {
     "fcnn_kernel_microbench": fcnn_kernel_microbench.run,
     "softmax_xent_microbench": fcnn_kernel_microbench.run_softmax_xent,
     "exec_program_bench": exec_program_bench.run,
+    "exec_residency_bench": exec_residency_bench.run,
     "fault_injection_bench": fault_injection_bench.run,
 }
 
@@ -168,6 +170,25 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
         out.append(f"check,exec,program cost annotations == simulate_epoch "
                    f"({len(rows)} programs, all strategies) -> "
                    f"{'PASS' if ok else 'FAIL'}")
+    if name == "exec_residency_bench":
+        trs = [r for r in rows if "peak_ok" in r]
+        ok = all(r["peak_ok"] and r["free_ok"] for r in trs)
+        worst = max(r["peak_ratio"] for r in trs)
+        out.append(f"check,residency,sharded peak <= replicated/d x1.1 and "
+                   f"param FREEs drain the ledger: worst ratio "
+                   f"{worst:.3f} -> {'PASS' if ok else 'FAIL'}")
+        timed = next((r for r in rows if r["case"] == "timed_step"), None)
+        if timed is not None:
+            if timed.get("skipped"):
+                out.append(f"check,residency,sharded==replicated step loss: "
+                           f"skipped ({timed['reason']})")
+            else:
+                ok = timed["loss_bitmatch"]
+                out.append(
+                    f"check,residency,sharded step loss bit-matches the "
+                    f"replicated oracle: step ratio "
+                    f"{timed['replicated_over_sharded_step']:.2f}x -> "
+                    f"{'PASS' if ok else 'FAIL'}")
     if name == "fault_injection_bench":
         pricing = [r for r in rows if "expected_s" in r]
         ok = all(r["expected_s"] >= r["degraded_s"] >= r["nominal_s"] > 0

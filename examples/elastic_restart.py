@@ -120,7 +120,10 @@ def device_loss_replan_resume() -> None:
     """Scenario 3 (the CI fault-smoke): seeded mid-run device loss on the
     8-device CPU ring -> Lemma-1 replan on survivors -> checkpoint-resume;
     the resumed trajectory must match a from-scratch run on the small
-    mesh."""
+    mesh.  Both runners execute the *weight-sharded* residency path
+    (ISSUE 8): params are sliced once at step start into per-device
+    column chunks and each replan re-derives the survivor ring's chunk
+    geometry — residency recovery is exercised, not just replanning."""
     sizes = [32, 16, 8, 10]
     n_dev, n_steps, batch = 8, 8, 8
     w = FCNNWorkload(sizes, batch_size=batch)
@@ -137,7 +140,8 @@ def device_loss_replan_resume() -> None:
         runner = DegradedModeRunner(
             workload=w, base_cfg=cfg, schedule=schedule,
             checkpointer=Checkpointer(tmp), optimizer=opt, n_devices=n_dev,
-            kernel_mode="ref", checkpoint_every=2, backoff_s=0.0)
+            kernel_mode="ref", residency="sharded", checkpoint_every=2,
+            backoff_s=0.0)
         state, _, report = runner.run(
             params0, opt.init(params0),
             Batcher({"x": x, "y": y}, batch_size=batch), n_steps)
@@ -147,7 +151,7 @@ def device_loss_replan_resume() -> None:
             workload=w, base_cfg=dataclasses.replace(cfg, m=survivors),
             schedule=FaultSchedule(), checkpointer=Checkpointer(tmp),
             optimizer=opt, n_devices=survivors, kernel_mode="ref",
-            checkpoint_every=2, backoff_s=0.0)
+            residency="sharded", checkpoint_every=2, backoff_s=0.0)
         scratch.run(params0, opt.init(params0),
                     Batcher({"x": x, "y": y}, batch_size=batch), n_steps)
 

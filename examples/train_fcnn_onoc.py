@@ -6,9 +6,14 @@ shardings.
   PYTHONPATH=src python examples/train_fcnn_onoc.py [--steps 300]
 
 With ``--program N`` the planner's schedule is *executed* instead of just
-priced: the plan is compiled to a static RUN/SEND/RECV/FREE period program
-(exec/program.py), cross-checked against core.simulator.simulate_epoch,
-and interpreted under shard_map on an N-device CPU ring (exec/runtime.py):
+priced, through the one-call façade ``repro.exec.compile(...)``: the plan
+is compiled to a static RUN/SEND/RECV/FREE period program with residency
+annotations (exec/program.py, schema v2), statically validated and
+cross-checked against core.simulator.simulate_epoch, and interpreted
+under shard_map on an N-device CPU ring (exec/runtime.py).  The default
+``--residency sharded`` keeps each device to ~1/d of the model (its
+column chunks, dropped at the Eq.-11 mirror periods); ``--residency
+replicated`` runs the full-model oracle:
 
   PYTHONPATH=src python examples/train_fcnn_onoc.py --program 8 --steps 100
 """
@@ -34,6 +39,11 @@ def main() -> None:
     ap.add_argument("--strategy", default="orrm",
                     choices=["fm", "rrm", "orrm"],
                     help="core mapping strategy (program mode)")
+    ap.add_argument("--residency", default="sharded",
+                    choices=["sharded", "replicated"],
+                    help="program-mode params layout: per-device column "
+                         "chunks (~1/d resident bytes) or the full-model "
+                         "replicated oracle")
     args = ap.parse_args()
 
     if args.program:
@@ -105,45 +115,52 @@ def main() -> None:
 
 
 def _run_program_mode(args, workload, onoc, mesh) -> None:
-    """Compile the plan to a RUN/SEND/RECV/FREE program, cross-check its
-    cost annotations against the simulator, and train through it."""
+    """Compile + execute the plan via the ``repro.exec.compile`` façade:
+    cross-check the program's cost annotations against the simulator, show
+    the residency profile, and train through the Executable."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core.planner import plan_fcnn, ring_mesh_axes
+    import repro.exec as rexec
     from repro.core.simulator import simulate_epoch
     from repro.data import fcnn_classification_dataset
-    from repro.exec import compile_program
-    from repro.exec.runtime import build_train_step
     from repro.models import fcnn
     from repro.optim import adam, linear_warmup_cosine
-    from repro.parallel.sharding import replicate
 
     n = args.program
     sizes = list(workload.layer_sizes)
-    plan = plan_fcnn(workload, onoc, ring_mesh_axes(n),
-                     strategy=args.strategy)
-    prog = compile_program(plan, workload, onoc, n)
-    print(f"compiled {args.strategy.upper()} program: "
+    exe = rexec.compile(workload, onoc, mesh, strategy=args.strategy,
+                        residency=args.residency, kernel_mode=args.kernel)
+    prog = exe.program
+    print(f"compiled {args.strategy.upper()} program (schema v"
+          f"{prog.version}, {args.residency} residency): "
           f"{len(prog.instructions)} instructions over {2 * prog.l} periods "
           f"on a {n}-device ring")
     for i in prog.instructions:
         extra = (f" layer={i.layer} {i.phase} m*={i.onoc_cores} "
                  f"degree={i.degree}" if i.opcode.value == "run" else "")
+        if i.opcode.value == "free" and i.layer is not None:
+            extra = f" layer={i.layer} param_bytes={i.param_bytes:.0f}"
         print(f"  P{i.period:>2} {i.opcode.value.upper():<4} "
               f"devices={list(i.devices)} cost={i.cost_s:.3e}s{extra}")
 
-    trace = simulate_epoch(workload, onoc, mapping=plan.mapping)
+    trace = simulate_epoch(workload, onoc, mapping=exe.plan.mapping)
     assert prog.compute_s == trace.compute_s
     assert prog.comm_s == trace.comm_s
     print(f"cost contract: program total {prog.total_s:.6e}s == "
           f"simulate_epoch {trace.total_s:.6e}s ✓")
 
-    opt = adam(linear_warmup_cosine(3e-3, 20, args.steps))
-    step, _ = build_train_step(prog, mesh, opt, kernel_mode=args.kernel)
+    from repro.exec.residency import replicated_model_bytes
+    tr = exe.tracker
+    full = replicated_model_bytes(prog)
+    print(f"residency ({args.residency}): peak {max(tr.peak_bytes()):.0f} B"
+          f"/device vs {full:.0f} B replicated "
+          f"(ratio {tr.peak_ratio():.3f}); FREEs release at periods "
+          f"{tr.release_periods()}")
 
-    params = replicate(fcnn.init(jax.random.PRNGKey(0), sizes), mesh)
-    opt_state = opt.init(params)
+    opt = adam(linear_warmup_cosine(3e-3, 20, args.steps))
+    state = exe.init_state(jax.random.PRNGKey(0), opt)
+    step = exe.train_step(opt)
     x, y = fcnn_classification_dataset(4096, input_dim=sizes[0], seed=0)
 
     t0 = time.time()
@@ -151,12 +168,14 @@ def _run_program_mode(args, workload, onoc, mesh) -> None:
         lo = (i * args.batch) % (len(x) - args.batch + 1)
         batch = {"x": jnp.asarray(x[lo:lo + args.batch]),
                  "y": jnp.asarray(y[lo:lo + args.batch])}
-        params, opt_state, loss = step(params, opt_state, batch, i)
+        state, metrics = step(state, batch)
         if i % 50 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(loss):.4f}")
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}")
     dt = time.time() - t0
     print(f"\n{args.steps} program steps in {dt:.1f}s "
           f"({1e3 * dt / args.steps:.1f} ms/step)")
+    params = (exe.gather_params(state["params"])
+              if args.residency == "sharded" else state["params"])
     final_acc = float(fcnn.accuracy(params, jnp.asarray(x), jnp.asarray(y),
                                     kernel_mode=args.kernel))
     print(f"final train accuracy: {final_acc:.3f}")

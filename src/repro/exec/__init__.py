@@ -12,15 +12,36 @@ this package existed the repo only *priced* those schedules
     annotations are cross-checkable against ``core.simulator.simulate_epoch``.
   * ``exec.runtime``  — the executor: interprets the program under
     ``jax.shard_map`` on a device mesh, driving the fused Pallas kernels
-    (``kernels.ops``) as the per-shard math.
+    (``kernels.ops``) as the per-shard math, in one of two residency
+    modes: ``"sharded"`` (each device holds only its column chunks; FREE
+    releases them at the Eq.-11 mirror periods) or ``"replicated"`` (the
+    PR-6 full-model oracle).
+  * ``exec.residency`` — per-device live-bytes accounting over the
+    program's schema-v2 residency annotations.
+  * ``exec.validate``  — static verifier: schedule invariants, the
+    residency byte ledger, and the cost contract vs the simulator.
+  * ``exec.api``      — the façade: ``repro.exec.compile(workload, cfg,
+    mesh, strategy=..., residency=...) -> Executable`` with
+    ``.train_step()`` / ``.loss_fn()`` / ``.program`` / ``.degrade()``,
+    replacing the scattered compile/validate/executor/step-builder chain
+    (the old entry points below remain as deprecation shims).
+
+See exec/README.md for the API and dispatch rules.
 """
 
+from repro.exec.api import (  # noqa: F401
+    Executable,
+    compile,
+)
 from repro.exec.program import (  # noqa: F401
     Instruction,
     Opcode,
     PeriodProgram,
     compile_fcnn_program,
     compile_program,
+)
+from repro.exec.residency import (  # noqa: F401
+    ResidencyTracker,
 )
 from repro.exec.runtime import (  # noqa: F401
     ProgramExecutor,
@@ -32,9 +53,12 @@ from repro.exec.validate import (  # noqa: F401
 )
 
 __all__ = [
+    "compile",
+    "Executable",
     "Opcode",
     "Instruction",
     "PeriodProgram",
+    "ResidencyTracker",
     "compile_program",
     "compile_fcnn_program",
     "ProgramExecutor",

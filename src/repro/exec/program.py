@@ -32,6 +32,19 @@ Two levels of placement coexist in one program:
 
 Programs are plain data: serializable via ``to_json``/``from_json`` so a
 compiled schedule can be shipped to workers or diffed across PRs.
+
+Schema v2 makes parameter **residency** explicit (the weight-sharded
+executor, exec/runtime.py): every RUN carries ``param_bytes`` — the bytes
+of the (n_{i-1}+1) x (n_i/d_i) weight+bias column chunk each window device
+holds for that period — and each layer's chunks are released by a *param*
+FREE (``layer`` set, ``param_bytes`` set) scheduled immediately after the
+chunk's last use, the layer's BP mirror period 2l-i+1 (Eq. 11).  The
+original window FREEs (``layer`` is None) keep their PR-6 meaning: a
+device leaving the *active* window drops its activations but keeps its
+weight chunks for BP.  ``exec.validate`` checks the byte ledger drains to
+exactly zero and that no RUN executes on freed chunks;
+``exec.residency.ResidencyTracker`` turns the annotations into a
+per-device live-bytes timeline.
 """
 
 from __future__ import annotations
@@ -61,7 +74,7 @@ __all__ = [
     "snap_to_ring_degree",
 ]
 
-_JSON_VERSION = 1
+_JSON_VERSION = 2        # v2: residency annotations (param_bytes, param FREEs)
 
 
 class Opcode(str, enum.Enum):
@@ -87,7 +100,7 @@ class Instruction:
     period: int
     devices: tuple[int, ...] = ()
     cost_s: float = 0.0
-    # RUN fields
+    # RUN fields (``layer`` is also set on param FREEs, see below)
     layer: int | None = None
     phase: str | None = None            # "fp" | "bp"
     activation: str | None = None
@@ -98,14 +111,19 @@ class Instruction:
     bytes_per_sender: float = 0.0
     slots: int = 0
     hop_bytes: float = 0.0
+    # residency annotation (schema v2): per-device bytes of the layer's
+    # weight+bias column chunk — held by each window device for a RUN,
+    # released by a param FREE (opcode FREE with ``layer`` set)
+    param_bytes: float = 0.0
 
     @classmethod
     def RUN(cls, period, layer, phase, activation, onoc_cores, degree,
-            chunk_width, window, cost_s):
+            chunk_width, window, cost_s, param_bytes=0.0):
         return cls(opcode=Opcode.RUN, period=period, devices=tuple(window),
                    cost_s=cost_s, layer=layer, phase=phase,
                    activation=activation, onoc_cores=onoc_cores,
-                   degree=degree, chunk_width=chunk_width)
+                   degree=degree, chunk_width=chunk_width,
+                   param_bytes=param_bytes)
 
     @classmethod
     def SEND(cls, period, senders, cost_s, bytes_per_sender, slots,
@@ -120,9 +138,13 @@ class Instruction:
                    devices=tuple(receivers))
 
     @classmethod
-    def FREE(cls, period, released):
+    def FREE(cls, period, released, layer=None, param_bytes=0.0):
+        """``layer`` is None for a window FREE (a device leaves the active
+        window, dropping activations); set for a param FREE (the released
+        devices drop their ``param_bytes`` chunk of that layer)."""
         return cls(opcode=Opcode.FREE, period=period,
-                   devices=tuple(released))
+                   devices=tuple(released), layer=layer,
+                   param_bytes=param_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +159,7 @@ class PeriodProgram:
     onoc_cores: tuple[int, ...]         # paper m_i*, FP periods 1..l
     degrees: tuple[int, ...]            # executor degree d_i, FP periods
     instructions: tuple[Instruction, ...]
+    version: int = _JSON_VERSION        # schema version (v2: residency)
 
     @property
     def l(self) -> int:  # noqa: E743 — paper notation
@@ -149,8 +172,18 @@ class PeriodProgram:
     def sends(self) -> list[Instruction]:
         return [i for i in self.instructions if i.opcode is Opcode.SEND]
 
-    def frees(self) -> list[Instruction]:
-        return [i for i in self.instructions if i.opcode is Opcode.FREE]
+    def frees(self, kind: str | None = None) -> list[Instruction]:
+        """FREE instructions: all (None), only window FREEs (``"window"``,
+        layer is None) or only param FREEs (``"param"``, layer set)."""
+        fs = [i for i in self.instructions if i.opcode is Opcode.FREE]
+        if kind == "window":
+            return [f for f in fs if f.layer is None]
+        if kind == "param":
+            return [f for f in fs if f.layer is not None]
+        if kind is not None:
+            raise ValueError(f"kind must be None, 'window' or 'param', "
+                             f"got {kind!r}")
+        return fs
 
     @property
     def compute_s(self) -> float:
@@ -170,9 +203,13 @@ class PeriodProgram:
         """Periods that send — must be {1..2l-1} \\ {l} (2l-2 of them)."""
         return [i.period for i in self.sends()]
 
+    def param_bytes_per_device(self) -> dict[int, float]:
+        """Per-device resident chunk bytes of each FP layer (1-based)."""
+        return {r.layer: r.param_bytes for r in self.runs(phase="fp")}
+
     def to_json(self) -> str:
         d = {
-            "version": _JSON_VERSION,
+            "version": self.version,
             "layer_sizes": list(self.layer_sizes),
             "batch_size": self.batch_size,
             "strategy": self.strategy,
@@ -190,9 +227,14 @@ class PeriodProgram:
 
     @classmethod
     def from_json(cls, s: str) -> "PeriodProgram":
+        """Load a serialized program.  v1 (PR 6, no residency annotations)
+        loads with zeroed ``param_bytes`` and no param FREEs — the
+        validator skips the residency ledger for version < 2, and the
+        sharded executor refuses such programs (recompile to upgrade)."""
         d = json.loads(s)
-        if d.get("version") != _JSON_VERSION:
-            raise ValueError(f"unsupported program version {d.get('version')}")
+        version = d.get("version")
+        if version not in (1, _JSON_VERSION):
+            raise ValueError(f"unsupported program version {version}")
         instrs = tuple(
             Instruction(**{**i, "opcode": Opcode(i["opcode"]),
                            "devices": tuple(i["devices"])})
@@ -207,6 +249,7 @@ class PeriodProgram:
             onoc_cores=tuple(d["onoc_cores"]),
             degrees=tuple(d["degrees"]),
             instructions=instrs,
+            version=int(version),
         )
 
 
@@ -272,15 +315,24 @@ def compile_program(
         window = exec_mapping.window(i)
         d_i = len(window)
         m_star = len(paper_mapping.window(i))
+        chunk_width = workload.n(layer) // d_i
+        # per-device residency: the (n_{layer-1}+1) x chunk_width
+        # weight+bias column chunk each window device holds (schema v2)
+        chunk_bytes = float(
+            (workload.n(layer - 1) + 1) * chunk_width * cfg.bytes_per_value)
         instrs.append(Instruction.RUN(
             period=i, layer=layer, phase=phase,
             activation=period_activation(layer, l),
             onoc_cores=m_star, degree=d_i,
-            chunk_width=workload.n(layer) // d_i, window=window,
+            chunk_width=chunk_width, window=window,
             cost_s=compute_time(workload, cfg, i, m_star),
+            param_bytes=chunk_bytes,
         ))
         if i == 2 * l:
             instrs.append(Instruction.FREE(period=i, released=window))
+            instrs.append(Instruction.FREE(
+                period=i, released=window, layer=layer,
+                param_bytes=chunk_bytes))
             break
         if i != l:  # period l is the FP->BP turnaround: data stays in place
             tr = backend.transition_time(workload, cfg, i, paper_mapping)
@@ -298,6 +350,12 @@ def compile_program(
             set(window) - set(exec_mapping.window(i + 1))))
         if released:
             instrs.append(Instruction.FREE(period=i, released=released))
+        if phase == "bp":
+            # the BP mirror period 2l-layer+1 is the chunk's last use
+            # (Eq. 11): wgrad done, the layer's params are dead this epoch
+            instrs.append(Instruction.FREE(
+                period=i, released=window, layer=layer,
+                param_bytes=chunk_bytes))
 
     program = PeriodProgram(
         layer_sizes=tuple(int(n) for n in workload.layer_sizes),

@@ -37,11 +37,34 @@ chunks within the final window and evaluates the fused
 ``ops.softmax_xent``; the program schedules no transition there (the
 paper keeps data in place at the turnaround, g(m_l) = 0).
 
-Numerics: params and batch enter fully replicated (PartitionSpec()), each
-chunk of each weight matrix is computed by exactly one selected device, so
-the transpose-sum over devices reproduces the single-device gradient —
-executor losses/grads match the single-device fused path to fp tolerance
-(pinned by tests/test_exec_runtime.py for paper configs on a CPU mesh).
+Two **residency** modes select the params-layout contract (ISSUE 8):
+
+  replicated   the PR-6 oracle.  Params and batch enter fully replicated
+               (``PartitionSpec()``); every device holds the full model and
+               slices its chunk per period; FREE is a cost annotation.
+  sharded      the weight-sharded path (schema-v2 programs only).  Params
+               enter *stacked*: layer i is ``w: (n_dev, n_{i-1}, n_i/d_i)``
+               / ``b: (n_dev, n_i/d_i)``, sharded ``P(axis)`` on the
+               leading device axis, so each device materializes exactly one
+               column chunk per layer — its own chunk if it is in the
+               layer's window (``shard_params`` places chunk
+               ``owner_chunk[j]`` on device j), zeros otherwise.  Weights
+               are never re-gathered whole: only *activations* move
+               (all_gather of the (B, n_i/d_i) period output).  Off-window
+               zero chunks produce unselected outputs, therefore zero
+               cotangents, therefore zero grads — plain elementwise
+               optimizers keep them exactly zero.  Per-device live
+               parameter bytes match the program's residency annotations
+               (``exec.residency.ResidencyTracker``): ~1/d of the
+               replicated model per degree-d period.
+
+Numerics: in both modes each chunk of each weight matrix is computed by
+exactly one selected device with identical inputs, so the sharded path is
+bit-identical to the replicated oracle — losses, grads and optimizer
+trajectories match with zero tolerance (pinned by
+tests/test_exec_residency.py on the 8-device CPU ring, ref and
+pallas_interpret kernels; tests/test_exec_runtime.py pins the oracle
+against the single-device fused path).
 """
 
 from __future__ import annotations
@@ -85,7 +108,8 @@ class ProgramExecutor:
     """
 
     def __init__(self, program: PeriodProgram, mesh: Mesh,
-                 kernel_mode: str | None = None):
+                 kernel_mode: str | None = None,
+                 residency: str = "replicated"):
         if len(mesh.axis_names) != 1:
             raise ValueError(
                 f"executor mesh must have one (ring) axis, got "
@@ -95,12 +119,25 @@ class ProgramExecutor:
             raise ValueError(
                 f"program compiled for {program.n_devices} devices, mesh "
                 f"has {n}")
+        if residency not in ("replicated", "sharded"):
+            raise ValueError(
+                f"residency must be 'replicated' or 'sharded', got "
+                f"{residency!r}")
+        if residency == "sharded" and program.version < 2:
+            raise ValueError(
+                f"sharded residency needs a schema-v2 program with "
+                f"residency annotations; this one is v{program.version} "
+                f"— recompile with compile_program")
         self.program = program
         self.mesh = mesh
         self.axis = mesh.axis_names[0]
+        self.residency = residency
         # Freeze the kernel dispatch for the program's whole lifetime so
         # every period of every step takes the same path.
         self.kernel_mode = ops.resolve_mode(kernel_mode)
+        # Byte-level accounting of the layout this executor runs under.
+        from repro.exec.residency import ResidencyTracker
+        self.tracker = ResidencyTracker(program, mode=residency)
 
         self._layout: list[_PeriodLayout] = []
         for run in program.runs(phase="fp"):
@@ -117,9 +154,15 @@ class ProgramExecutor:
         self._rebuild()
 
     def _rebuild(self) -> None:
+        if self.residency == "sharded":
+            body = self._device_program_sharded
+            pspec = self.param_spec()
+        else:
+            body = self._device_program
+            pspec = P()
         self._sharded = shard_map(
-            self._device_program, mesh=self.mesh,
-            in_specs=(P(), P(), P()), out_specs=P(),
+            body, mesh=self.mesh,
+            in_specs=(pspec, P(), P()), out_specs=P(),
             # loss is replicated by construction (identical full logits on
             # every device after the final gather); collective use below is
             # beyond what the static replication checker can verify.
@@ -164,26 +207,109 @@ class ProgramExecutor:
             h = h.reshape(batch, lay.n_out)
         return ops.softmax_xent(h, y, force=self.kernel_mode)
 
+    def _device_program_sharded(self, params: Params, x: jax.Array,
+                                y: jax.Array) -> jax.Array:
+        """Sharded-residency view: params arrive pre-chunked — this
+        device's block of the stacked layout is its resident column chunk
+        (zeros off-window), so RUN needs no slice and the weights are
+        never re-gathered whole; only the (B, width) activations move."""
+        h = x
+        batch = x.shape[0]
+        for lay in self._layout:
+            lp = params["layers"][lay.layer - 1]
+            w_loc = lp["w"][0]                    # (n_in, width) chunk
+            b_loc = lp["b"][0]                    # (width,)
+            y_loc = ops.fcnn_layer(h, w_loc, b_loc, lay.activation,
+                                   force=self.kernel_mode)
+            # Same window-ordered selection as the oracle: chunk j of the
+            # next activation comes from device window[j], whose stacked
+            # slot holds exactly chunk j (shard_params' placement).
+            gathered = jax.lax.all_gather(y_loc, self.axis)   # (n, B, width)
+            h = jnp.moveaxis(gathered[lay.window], 0, 1)      # (B, d, width)
+            h = h.reshape(batch, lay.n_out)
+        return ops.softmax_xent(h, y, force=self.kernel_mode)
+
+    # ------------------------------------------------------- sharded layout
+
+    @property
+    def n_devices(self) -> int:
+        return self.program.n_devices
+
+    def param_spec(self) -> Params:
+        """PartitionSpec pytree of the stacked sharded params layout."""
+        return {"layers": [{"w": P(self.axis), "b": P(self.axis)}
+                           for _ in range(self.program.l)]}
+
+    def shard_params(self, params: Params) -> Params:
+        """Full layout -> stacked residency layout.
+
+        For layer i, device j's slot is column chunk ``owner_chunk[j]`` of
+        (W_i, b_i) if j is in the layer's window, zeros otherwise — the
+        memory image the program's residency annotations account for.
+        Traceable (static slices), so it can run inside a jitted step to
+        realise the "sliced once at step start" contract."""
+        self._check_params(params, layout="full")
+        n = self.n_devices
+        layers = []
+        for lay in self._layout:
+            lp = params["layers"][lay.layer - 1]
+            w, b = lp["w"], lp["b"]
+            in_window = np.zeros(n, dtype=bool)
+            in_window[lay.window] = True
+            sw, sb = [], []
+            for j in range(n):
+                if in_window[j]:
+                    c = int(lay.owner_chunk[j])
+                    sw.append(w[:, c * lay.width:(c + 1) * lay.width])
+                    sb.append(b[c * lay.width:(c + 1) * lay.width])
+                else:
+                    sw.append(jnp.zeros_like(w[:, :lay.width]))
+                    sb.append(jnp.zeros_like(b[:lay.width]))
+            layers.append({"w": jnp.stack(sw), "b": jnp.stack(sb)})
+        return {"layers": layers}
+
+    def gather_params(self, sparams: Params) -> Params:
+        """Stacked residency layout -> full layout (chunk j of layer i
+        comes from device window[j]'s slot).  The only place the full
+        matrices are reassembled — used for eval/checkpoint interop, never
+        inside the sharded loss."""
+        self._check_params(sparams, layout="sharded")
+        layers = []
+        for lay in self._layout:
+            sp = sparams["layers"][lay.layer - 1]
+            w = jnp.concatenate([sp["w"][d] for d in lay.window], axis=1)
+            b = jnp.concatenate([sp["b"][d] for d in lay.window], axis=0)
+            layers.append({"w": w, "b": b})
+        return {"layers": layers}
+
     # ------------------------------------------------------------------ api
 
     def loss_fn(self, params: Params, batch: Params) -> jax.Array:
-        """Mean softmax cross-entropy of the program on ``batch``."""
-        self._check_params(params)
+        """Mean softmax cross-entropy of the program on ``batch``.
+
+        ``params`` must be in the executor's residency layout: full
+        (replicated mode) or stacked chunks from ``shard_params``
+        (sharded mode)."""
+        self._check_params(params, layout="full" if
+                           self.residency == "replicated" else "sharded")
         return self._sharded(params, batch["x"], batch["y"])
 
-    def _check_params(self, params: Params) -> None:
+    def _check_params(self, params: Params, layout: str = "full") -> None:
         sizes = self.program.layer_sizes
         layers = params["layers"]
         if len(layers) != self.program.l:
             raise ValueError(
                 f"program has {self.program.l} layers, params have "
                 f"{len(layers)}")
-        for i, lp in enumerate(layers):
-            want = (sizes[i], sizes[i + 1])
+        for i, (lp, lay) in enumerate(zip(layers, self._layout)):
+            if layout == "full":
+                want = (sizes[i], sizes[i + 1])
+            else:
+                want = (self.n_devices, sizes[i], lay.width)
             if tuple(lp["w"].shape) != want:
                 raise ValueError(
                     f"layer {i + 1}: weight shape {tuple(lp['w'].shape)} "
-                    f"!= program shape {want}")
+                    f"!= {layout}-layout shape {want}")
 
 
 def build_train_step(
@@ -194,7 +320,17 @@ def build_train_step(
 ) -> tuple[Callable, ProgramExecutor]:
     """A jitted ``step(params, opt_state, batch, i)`` whose loss is the
     compiled program executed under shard_map.  Drop-in for the plain
-    single-device step of examples/train_fcnn_onoc.py."""
+    single-device step of examples/train_fcnn_onoc.py.
+
+    .. deprecated:: ISSUE 8 — use the façade:
+       ``repro.exec.compile(...)`` / ``Executable.from_program(...)``
+       and ``Executable.train_step(optimizer)``.  Kept as a thin
+       replicated-residency shim."""
+    import warnings
+    warnings.warn(
+        "build_train_step is deprecated; use repro.exec.compile(...) "
+        "or Executable.from_program(...).train_step(optimizer)",
+        DeprecationWarning, stacklevel=2)
     ex = ProgramExecutor(program, mesh, kernel_mode=kernel_mode)
 
     @jax.jit

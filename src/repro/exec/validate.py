@@ -28,10 +28,19 @@ Checks, in order:
   SEND/RECV     transitions exactly at {1..2l-1} \\ {l}; every RECV has a
                 matching SEND and vice versa; senders are the current RUN
                 window and receivers the next RUN window;
-  FREE          only devices held at the period are freed, never a device
-                the next period's window still needs (free-before-last-
-                use), each window exit freed exactly once, and the final
-                window freed wholesale at period 2l;
+  FREE          (window FREEs, ``layer`` is None) only devices held at the
+                period are freed, never a device the next period's window
+                still needs (free-before-last-use), each window exit freed
+                exactly once, and the final window freed wholesale at
+                period 2l;
+  residency     (schema v2) every RUN carries positive ``param_bytes``
+                agreeing between a layer's FP run and its BP mirror; each
+                layer's chunks are released by exactly one param FREE
+                (``layer`` set), at exactly the BP mirror period 2l-i+1
+                (Eq. 11 — the chunk's last use), over exactly the layer's
+                window, for exactly the RUN's bytes; no RUN executes on
+                non-resident (already freed) chunks; the byte ledger
+                drains to exactly zero on every device;
   costs         (with workload + cfg) RUN costs equal the paper-level
                 ``compute_time`` and SEND costs the backend transition
                 time under the simulator's conventions — the program's
@@ -157,10 +166,10 @@ def validate_program(
             _fail(f"RECV period {p}: receivers {list(recvs[p].devices)} != "
                   f"period-{p + 1} RUN window {list(runs[p + 1].devices)}")
 
-    # --------------------------------------------------------------- FREE
+    # ------------------------------------------------- FREE (window kind)
     frees: dict[int, list] = {}
     for ins in instrs:
-        if ins.opcode is Opcode.FREE:
+        if ins.opcode is Opcode.FREE and ins.layer is None:
             frees.setdefault(ins.period, []).append(ins)
     for p, fs in frees.items():
         released = [d for f in fs for d in f.devices]
@@ -192,6 +201,78 @@ def validate_program(
         _fail(f"period {2 * l}: final FREE releases "
               f"{sorted(final_released)} != final window "
               f"{sorted(runs[2 * l].devices)}")
+
+    # ---------------------------------------------- residency (schema v2)
+    if program.version >= 2:
+        param_frees = [i for i in instrs if i.opcode is Opcode.FREE
+                       and i.layer is not None]
+        for layer in range(1, l + 1):
+            fp = runs[layer]
+            bp = runs[2 * l - layer + 1]
+            if fp.param_bytes <= 0.0:
+                _fail(f"RUN period {layer}: param_bytes "
+                      f"{fp.param_bytes!r} must be positive (schema v2 "
+                      f"residency annotation)")
+            if bp.param_bytes != fp.param_bytes:
+                _fail(f"RUN period {2 * l - layer + 1}: BP param_bytes "
+                      f"{bp.param_bytes!r} != FP mirror's "
+                      f"{fp.param_bytes!r} (layer {layer} chunks are "
+                      f"reused, not re-acquired)")
+            lf = [f for f in param_frees if f.layer == layer]
+            if len(lf) != 1:
+                _fail(f"layer {layer}: expected exactly one param FREE, "
+                      f"found {len(lf)} (chunk residency ledger)")
+            f = lf[0]
+            mirror = 2 * l - layer + 1
+            if f.period != mirror:
+                _fail(f"param FREE for layer {layer} at period {f.period} "
+                      f"!= BP mirror period {mirror} (Eq. 11: the chunk's "
+                      f"last use)")
+            if set(f.devices) != set(fp.devices):
+                _fail(f"param FREE for layer {layer}: devices "
+                      f"{sorted(f.devices)} != layer window "
+                      f"{sorted(fp.devices)}")
+            if f.param_bytes != fp.param_bytes:
+                _fail(f"param FREE for layer {layer}: releases "
+                      f"{f.param_bytes!r} bytes != resident chunk bytes "
+                      f"{fp.param_bytes!r} (ledger would not drain)")
+        bad_layers = sorted({f.layer for f in param_frees}
+                            - set(range(1, l + 1)))
+        if bad_layers:
+            _fail(f"param FREE for unknown layer(s) {bad_layers}")
+        # ordered walk: a RUN after its layer's param FREE touches
+        # non-resident chunks
+        freed: set[int] = set()
+        for ins in instrs:
+            if ins.opcode is Opcode.RUN and ins.layer in freed:
+                _fail(f"RUN period {ins.period}: layer {ins.layer} chunks "
+                      f"are non-resident (freed by an earlier param FREE) "
+                      f"— RUN operands must be resident")
+            if ins.opcode is Opcode.FREE and ins.layer is not None:
+                freed.add(ins.layer)
+        # per-device ledger: acquired bytes must drain to exactly zero
+        acquired = [0.0] * n_dev
+        for layer in range(1, l + 1):
+            for d in runs[layer].devices:
+                acquired[d] += runs[layer].param_bytes
+        for f in param_frees:
+            for d in f.devices:
+                acquired[d] -= f.param_bytes
+        leaky = [d for d in range(n_dev) if acquired[d] != 0.0]
+        if leaky:
+            _fail(f"residency ledger does not drain to zero on device(s) "
+                  f"{leaky}: residual bytes "
+                  f"{[acquired[d] for d in leaky]}")
+        if workload is not None and cfg is not None:
+            for layer in range(1, l + 1):
+                run = runs[layer]
+                want = float((workload.n(layer - 1) + 1) * run.chunk_width
+                             * cfg.bytes_per_value)
+                if run.param_bytes != want:
+                    _fail(f"RUN period {layer}: param_bytes "
+                          f"{run.param_bytes!r} != chunk geometry "
+                          f"(n_{layer - 1}+1) x chunk_width x "
+                          f"bytes_per_value = {want!r}")
 
     # -------------------------------------------------------------- costs
     if workload is None or cfg is None:

@@ -138,22 +138,25 @@ def build_fcnn_program_step(
     (exec.runtime), with the same AdamW + global-norm clipping as the
     generic step.  Returns (jitted step, executor); state is the plain
     {"params", "opt", "step"} dict (init via ``init_fcnn_program_state``).
+
+    .. deprecated:: ISSUE 8 — thin shim over the façade
+       (``repro.exec.Executable``), pinned to the replicated-residency
+       oracle the old surface assumed.  New code should call
+       ``repro.exec.compile(...)`` and ``Executable.train_step``.
     """
-    from repro.exec.runtime import ProgramExecutor
+    import warnings
 
+    from repro.exec.api import Executable
+
+    warnings.warn(
+        "build_fcnn_program_step is deprecated; use repro.exec.compile(...)"
+        " or Executable.from_program(...).train_step(...)",
+        DeprecationWarning, stacklevel=2)
     opt = adamw(settings.learning_rate, weight_decay=settings.weight_decay)
-    ex = ProgramExecutor(program, mesh, kernel_mode=kernel_mode)
-
-    def step(state, batch):
-        loss, grads = jax.value_and_grad(ex.loss_fn)(state["params"], batch)
-        grads, gnorm = clip_by_global_norm(grads, settings.grad_clip)
-        params, opt_state = opt.update(grads, state["opt"], state["params"],
-                                       state["step"])
-        new_state = {"params": params, "opt": opt_state,
-                     "step": state["step"] + 1}
-        return new_state, {"loss": loss, "grad_norm": gnorm}
-
-    return jax.jit(step, donate_argnums=(0,)), ex
+    exe = Executable.from_program(program, mesh, residency="replicated",
+                                  kernel_mode=kernel_mode)
+    step = exe.train_step(opt, grad_clip=settings.grad_clip)
+    return step, exe.executor
 
 
 def init_fcnn_program_state(program, settings: TrainSettings, key) -> Params:

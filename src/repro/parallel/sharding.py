@@ -28,6 +28,7 @@ __all__ = [
     "named_sharding",
     "replicate",
     "shard_constraint",
+    "shard_stacked",
     "tree_shardings",
 ]
 
@@ -158,11 +159,34 @@ def shard_constraint(
 def replicate(tree: Any, mesh: Mesh) -> Any:
     """device_put a pytree fully replicated across ``mesh``.
 
-    The period-program executor's placement convention: every device holds
-    the full params/batch and slices its per-period chunk on-device
-    (exec/runtime.py), so replication is the correct resident layout."""
+    The period-program executor's *replicated*-residency placement
+    (exec/runtime.py oracle path): every device holds the full
+    params/batch and slices its per-period chunk on-device.  The
+    weight-sharded residency path instead stacks per-device chunks and
+    splits them over the ring axis (``shard_stacked``), holding ~1/d of
+    the model per device."""
     sh = NamedSharding(mesh, P())
     return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def shard_stacked(tree: Any, mesh: Mesh, axis: str | None = None) -> Any:
+    """device_put a pytree of *stacked* per-device leaves — shape
+    ``(n_devices, ...)`` — split over ``axis`` (default: the mesh's only
+    axis), leaving scalars and non-stacked leaves replicated.
+
+    This is the resident layout of the weight-sharded period-program
+    executor (exec/runtime.py): leaf ``[j]`` is device j's column chunk,
+    so the device materializes exactly its ``param_bytes`` of each layer
+    (exec.residency accounting)."""
+    axis = axis or mesh.axis_names[0]
+    n = _axis_size(mesh, axis)
+
+    def put(x):
+        stacked = getattr(x, "ndim", 0) >= 1 and x.shape[0] == n
+        spec = P(axis) if stacked else P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree)
 
 
 def _current_mesh() -> Mesh | None:

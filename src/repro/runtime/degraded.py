@@ -69,6 +69,14 @@ class DegradedModeRunner:
     ``workload.m``-independent: the paper config's ``m`` is re-derived from
     the live device count at every (re)plan, so Lemma 1 always answers for
     the ring that actually exists.
+
+    ``residency`` selects the executor path per ISSUE 8: ``"sharded"``
+    runs the weight-sharded executor (params sliced once at step start
+    into per-device chunks, ~1/d resident bytes), with the *canonical*
+    state kept in the full layout so checkpoints restore across replans
+    whose survivor rings have different chunk geometry; ``"replicated"``
+    is the PR-6 oracle.  Both paths produce bit-identical losses, so the
+    post-replan-equals-from-scratch pin holds in either mode.
     """
 
     workload: FCNNWorkload
@@ -79,6 +87,7 @@ class DegradedModeRunner:
     n_devices: int
     strategy: MappingStrategy = MappingStrategy.ORRM
     kernel_mode: str | None = None
+    residency: str = "replicated"
     backend: Any = None
     checkpoint_every: int = 2
     max_retries: int = 3
@@ -92,6 +101,7 @@ class DegradedModeRunner:
                                       strategy=self.strategy)
         self.losses: dict[int, float] = {}   # step -> last observed loss
         self.program = None
+        self.executable = None
         self.executor: ProgramExecutor | None = None
         self._step_jit = None
         self._mesh = None
@@ -113,12 +123,37 @@ class DegradedModeRunner:
         validate_program(program, self.workload, cfg, backend=self.backend)
         self.program = program
         self._mesh = self._make_mesh(n_devices)
-        self.executor = ProgramExecutor(program, self._mesh,
-                                        kernel_mode=self.kernel_mode)
+        # The façade re-derives residency for the survivor ring: the
+        # recompiled schema-v2 program carries the survivors' chunk
+        # geometry + param FREEs, and the executor's tracker accounts it.
+        from repro.exec.api import Executable
+        exe = Executable.from_program(
+            program, self._mesh, residency=self.residency,
+            kernel_mode=self.kernel_mode, workload=self.workload, cfg=cfg,
+            plan=plan, backend=self.backend)
+        self.executable = exe
+        self.executor = exe.executor
         self._step_jit = self._fresh_step()
 
     def _fresh_step(self):
         ex, opt = self.executor, self.optimizer
+
+        if ex.residency == "sharded":
+            # Canonical state stays in the full layout so checkpoints are
+            # portable across replans (each survivor ring has different
+            # chunk geometry).  Params are sliced once at step start into
+            # the stacked residency layout and never re-gathered whole
+            # inside the program; only the grads come back full for the
+            # layout-independent optimizer update.
+            @jax.jit
+            def step(params, opt_state, batch, i):
+                sp = ex.shard_params(params)
+                loss, sgrads = jax.value_and_grad(ex.loss_fn)(sp, batch)
+                grads = ex.gather_params(sgrads)
+                params, opt_state = opt.update(grads, opt_state, params, i)
+                return params, opt_state, loss
+
+            return step
 
         @jax.jit
         def step(params, opt_state, batch, i):

@@ -185,6 +185,13 @@ class FaultSchedule:
             and (step is None or e.step == step)
         )
 
+    def transient_runs(self, step: int | None = None) -> tuple[FaultEvent, ...]:
+        return tuple(
+            e for e in self.events
+            if e.kind is FaultKind.TRANSIENT_RUN
+            and (step is None or e.step == step)
+        )
+
     def to_dicts(self) -> list[dict]:
         return [e.to_dict() for e in self.events]
 
@@ -385,6 +392,8 @@ class FaultPricing:
     re_transition_s: float      # state re-load onto the surviving window
     replanned_epoch_s: float    # Lemma-1 epoch on the surviving core set
     expected_s: float           # the headline number
+    retry_s: float = 0.0        # wasted work re-done for TRANSIENT_RUN
+    retries: int = 0            # total retry attempts priced
 
     @property
     def overhead_pct(self) -> float:
@@ -438,6 +447,15 @@ def expected_epoch_time(
 
     which is exactly what the degraded-mode runner executes
     (runtime/degraded.py): replan, recompile, resume-from-checkpoint.
+
+    TRANSIENT_RUN events are priced as retry waste: the supervisor's
+    retry restarts the step from its beginning, so a transient at period
+    p that fails ``count`` attempts re-does the degraded prefix through
+    period p's RUN (compute of periods 1..p + transitions before p)
+    ``count`` times.  With a device loss at boundary p_loss only
+    transients strictly before p_loss are priced — later boundaries are
+    never reached, and post-replan retries belong to the next epoch's
+    price.  ``retry_s`` carries the total; ``expected_s`` includes it.
     """
     from repro.core.simulator import ONoCBackend, simulate_epoch
 
@@ -447,16 +465,35 @@ def expected_epoch_time(
                              backend=backend)
     degraded = simulate_epoch(workload, cfg, strategy=strategy,
                               backend=backend, faults=ef)
+    n_periods = 2 * workload.l
+
+    def _retry_cost(before_period: int | None) -> tuple[float, int]:
+        transients = (schedule.transient_runs(step) if step is not None
+                      else schedule.transient_runs())
+        total, n_retries = 0.0, 0
+        for e in transients:
+            p = min(max(e.period, 1), n_periods)  # 0 = first RUN boundary
+            if before_period is not None and p >= before_period:
+                continue
+            n = max(e.count, 1)
+            wasted = (sum(degraded.per_period_compute_s[:p])
+                      + sum(t.comm_s for t in degraded.transitions
+                            if t.period < p))
+            total += n * wasted
+            n_retries += n
+        return total, n_retries
 
     losses = (schedule.device_losses(step) if step is not None
               else schedule.device_losses())
     if not losses:
+        retry_s, retries = _retry_cost(None)
         return FaultPricing(
             backend=backend.name, strategy=nominal.strategy,
             nominal_s=nominal.total_s, degraded_s=degraded.total_s,
             loss_period=None, survivors=cfg.m, prefix_s=degraded.total_s,
             re_transition_s=0.0, replanned_epoch_s=0.0,
-            expected_s=degraded.total_s,
+            expected_s=degraded.total_s + retry_s,
+            retry_s=retry_s, retries=retries,
         )
 
     p = min(max(e.period, 1) for e in losses)
@@ -467,6 +504,7 @@ def expected_epoch_time(
     prefix = sum(degraded.per_period_compute_s[: p - 1])
     prefix += sum(t.comm_s for t in degraded.transitions if t.period < p)
     re_tr = _retransition_cost(workload, cfg, survivors, backend)
+    retry_s, retries = _retry_cost(p)
 
     cfg_surv = dataclasses.replace(cfg, m=survivors)
     cores = optimal_cores(workload, cfg_surv, refine_plateau=refine_plateau)
@@ -475,11 +513,11 @@ def expected_epoch_time(
                                cores_per_period=cores, backend=backend,
                                faults=ef)
 
-    expected = prefix + re_tr + replanned.total_s
+    expected = prefix + retry_s + re_tr + replanned.total_s
     return FaultPricing(
         backend=backend.name, strategy=nominal.strategy,
         nominal_s=nominal.total_s, degraded_s=degraded.total_s,
         loss_period=p, survivors=survivors, prefix_s=prefix,
         re_transition_s=re_tr, replanned_epoch_s=replanned.total_s,
-        expected_s=expected,
+        expected_s=expected, retry_s=retry_s, retries=retries,
     )

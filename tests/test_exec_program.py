@@ -64,7 +64,7 @@ def test_program_structure(nn, strategy):
 def test_free_matches_window_diffs(strategy):
     w, cfg, prog = _compile("NN1", strategy=strategy)
     runs = {r.period: r for r in prog.runs()}
-    frees = {f.period: f for f in prog.frees()}
+    frees = {f.period: f for f in prog.frees("window")}
     for i in range(1, 2 * w.l):
         released = sorted(set(runs[i].devices) - set(runs[i + 1].devices))
         if released:
@@ -161,7 +161,7 @@ def test_json_round_trip(strategy):
 
 def test_json_version_guard():
     _, _, prog = _compile()
-    bad = prog.to_json().replace('"version": 1', '"version": 99', 1)
+    bad = prog.to_json().replace('"version": 2', '"version": 99', 1)
     with pytest.raises(ValueError):
         PeriodProgram.from_json(bad)
 

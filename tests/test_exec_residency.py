@@ -1,0 +1,282 @@
+"""Weight-sharded residency (ISSUE 8): tracker-level byte accounting on
+the 8-device CPU ring, bit-for-bit equivalence of the sharded executor
+with the replicated oracle, and the plan->compile->execute façade."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.exec as rexec
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.data import fcnn_classification_dataset
+from repro.exec.program import PeriodProgram, compile_fcnn_program
+from repro.exec.residency import ResidencyTracker, replicated_model_bytes
+from repro.exec.runtime import ProgramExecutor
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_test_mesh
+from repro.models import fcnn
+from repro.optim import adam
+from repro.optim.optimizers import adamw
+
+N_DEV = 8
+CFG = onoc_config(lambda_max=64)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh(N_DEV)
+
+
+def _batch(w, batch, seed=3):
+    x, y = fcnn_classification_dataset(batch, input_dim=w.layer_sizes[0],
+                                       seed=seed)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+# ----------------------------------------------------------- tracker level
+
+
+@pytest.mark.parametrize("nn", ["NN1", "NN2"])
+@pytest.mark.parametrize("strategy", ["fm", "rrm", "orrm"])
+def test_per_period_bytes_are_replicated_over_d(nn, strategy):
+    """ISSUE 8 acceptance: per-device resident bytes of a degree-d
+    period's layer are <= (replicated layer bytes) / d x 1.1 — in fact
+    exactly 1/d, chunk geometry is exact."""
+    w = workload(nn, batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, strategy)
+    for run in prog.runs("fp"):
+        layer_full = float((w.n(run.layer - 1) + 1) * w.n(run.layer)
+                           * CFG.bytes_per_value)
+        assert run.param_bytes <= layer_full / run.degree * 1.1
+        assert run.param_bytes == layer_full / run.degree
+
+    tracker = ResidencyTracker(prog, mode="sharded")
+    full = replicated_model_bytes(prog)
+    # peak per device is bounded by the sum of 1/d_i chunks, far below 1x
+    assert max(tracker.peak_bytes()) <= sum(
+        r.param_bytes for r in prog.runs("fp"))
+    assert tracker.peak_ratio() < 1.0
+    # on the uniform part of the ring: acquisition equals the chunk sum
+    # for devices in every window
+    in_all = set(range(N_DEV))
+    for r in prog.runs("fp"):
+        in_all &= set(r.devices)
+    for d in in_all:
+        assert tracker.timeline()[0].live_bytes[d] == pytest.approx(
+            sum(r.param_bytes for r in prog.runs("fp")))
+    assert full == pytest.approx(sum(
+        (w.n(i - 1) + 1) * w.n(i) * CFG.bytes_per_value
+        for i in range(1, w.l + 1)))
+
+
+@pytest.mark.parametrize("nn", ["NN1", "NN2"])
+def test_free_releases_at_exactly_scheduled_periods(nn):
+    """FREE measurably reduces live bytes at exactly the param-FREE
+    periods (the BP mirror periods), and the ledger drains to zero."""
+    w = workload(nn, batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    tracker = ResidencyTracker(prog, mode="sharded")
+    scheduled = sorted({f.period for f in prog.frees("param")})
+    assert scheduled == list(range(w.l + 1, 2 * w.l + 1))  # Eq. 11 mirrors
+    assert tracker.release_periods() == scheduled
+    assert tracker.final_bytes() == (0.0,) * N_DEV
+    # live bytes are non-increasing over the epoch (acquisition up front)
+    timeline = tracker.timeline()
+    for prev, cur in zip(timeline, timeline[1:]):
+        assert all(c <= p for p, c in zip(prev.live_bytes, cur.live_bytes))
+
+
+def test_replicated_tracker_is_flat_full_model():
+    w = workload("NN1", batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    tracker = ResidencyTracker(prog, mode="replicated")
+    full = replicated_model_bytes(prog)
+    assert tracker.peak_ratio() == 1.0
+    for snap in tracker.timeline():
+        assert snap.live_bytes == (full,) * N_DEV
+    assert tracker.release_periods() == []
+
+
+def test_sharded_tracker_refuses_v1_programs():
+    w = workload("NN1", batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    v1 = dataclasses.replace(prog, version=1)
+    with pytest.raises(ValueError, match="recompile"):
+        ResidencyTracker(v1, mode="sharded")
+    ResidencyTracker(v1, mode="replicated")   # oracle accounting is fine
+
+
+# ------------------------------------------------- executor bit-equivalence
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("kernel_mode", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("nn", ["NN1", "NN2"])
+def test_sharded_matches_replicated_bit_for_bit(mesh, nn, kernel_mode):
+    """Losses and grads of the sharded executor equal the replicated
+    oracle exactly (same chunk, same device, same fp ops)."""
+    w = workload(nn, batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    ex_r = ProgramExecutor(prog, mesh, kernel_mode=kernel_mode)
+    ex_s = ProgramExecutor(prog, mesh, kernel_mode=kernel_mode,
+                           residency="sharded")
+    params = fcnn.init(jax.random.PRNGKey(0), w.layer_sizes)
+    batch = _batch(w, 8)
+
+    loss_r, grads_r = jax.value_and_grad(ex_r.loss_fn)(params, batch)
+    sp = ex_s.shard_params(params)
+    loss_s, sgrads = jax.value_and_grad(ex_s.loss_fn)(sp, batch)
+    np.testing.assert_array_equal(np.asarray(loss_r), np.asarray(loss_s))
+    assert _trees_equal(grads_r, ex_s.gather_params(sgrads))
+
+
+def test_shard_gather_round_trip(mesh):
+    w = workload("NN1", batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    ex = ProgramExecutor(prog, mesh, residency="sharded", kernel_mode="ref")
+    params = fcnn.init(jax.random.PRNGKey(7), w.layer_sizes)
+    assert _trees_equal(params, ex.gather_params(ex.shard_params(params)))
+
+
+def test_sharded_executor_refuses_v1_programs(mesh):
+    w = workload("NN1", batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    v1 = dataclasses.replace(prog, version=1)
+    with pytest.raises(ValueError, match="schema-v2"):
+        ProgramExecutor(v1, mesh, residency="sharded")
+    ProgramExecutor(v1, mesh)                 # replicated oracle still runs
+
+
+@pytest.mark.parametrize("kernel_mode", ["ref", "pallas_interpret"])
+def test_five_step_adam_trajectory_matches(mesh, kernel_mode):
+    """5 Adam steps through the façade: gathered sharded params equal the
+    replicated oracle's params bit-for-bit (elementwise optimizer ->
+    identical per-chunk update)."""
+    w = workload("NN1", batch_size=8)
+    opt = adam(1e-3)
+    exes = {
+        res: rexec.compile(w, CFG, mesh, strategy="orrm", residency=res,
+                           kernel_mode=kernel_mode)
+        for res in ("sharded", "replicated")
+    }
+    states = {res: exe.init_state(jax.random.PRNGKey(0), opt)
+              for res, exe in exes.items()}
+    step_fns = {res: exe.train_step(opt, donate=False)
+                for res, exe in exes.items()}
+    losses = {res: [] for res in exes}
+    for i in range(5):
+        batch = _batch(w, 8, seed=i)
+        for res in exes:
+            states[res], metrics = step_fns[res](states[res], batch)
+            losses[res].append(float(metrics["loss"]))
+    assert losses["sharded"] == losses["replicated"]
+    gathered = exes["sharded"].gather_params(states["sharded"]["params"])
+    assert _trees_equal(gathered, states["replicated"]["params"])
+
+
+def test_off_window_chunks_stay_exactly_zero(mesh):
+    """Zero placeholder chunks on off-window devices get zero grads and
+    stay exactly zero through training — the sharded layout never leaks
+    mass into chunks the schedule says are not resident."""
+    w = workload("NN1", batch_size=8)
+    exe = rexec.compile(w, CFG, mesh, residency="sharded",
+                        kernel_mode="ref")
+    opt = adam(1e-2)
+    state = exe.init_state(jax.random.PRNGKey(0), opt)
+    step = exe.train_step(opt, donate=False)
+    for i in range(3):
+        state, _ = step(state, _batch(w, 8, seed=i))
+    for lay, lp in zip(exe.executor._layout, state["params"]["layers"]):
+        off = sorted(set(range(N_DEV)) - set(int(d) for d in lay.window))
+        for d in off:
+            assert not np.asarray(lp["w"][d]).any()
+            assert not np.asarray(lp["b"][d]).any()
+
+
+# ------------------------------------------------------------------ façade
+
+
+def test_facade_compile_surface(mesh):
+    w = workload("NN2", batch_size=8)
+    exe = rexec.compile(w, CFG, mesh, strategy="rrm", residency="sharded",
+                        kernel_mode="ref")
+    assert isinstance(exe, rexec.Executable)
+    assert isinstance(exe.program, PeriodProgram)
+    assert exe.program.version == 2
+    assert exe.program.strategy == "rrm"
+    assert exe.residency == "sharded"
+    assert exe.tracker.peak_ratio() < 1.0
+    # loss_fn composes with jit/grad on the residency layout
+    params = exe.shard_params(fcnn.init(jax.random.PRNGKey(0),
+                                        w.layer_sizes))
+    loss = jax.jit(exe.loss_fn)(params, _batch(w, 8))
+    assert np.isfinite(float(loss))
+    # degrade swaps the kernel dispatch and reports the previous mode
+    assert exe.degrade("ref") == "ref"
+
+
+def test_facade_rejects_bad_residency(mesh):
+    w = workload("NN1", batch_size=8)
+    with pytest.raises(ValueError, match="residency"):
+        rexec.compile(w, CFG, mesh, residency="holographic")
+
+
+def test_old_entry_points_are_deprecation_shims(mesh):
+    """The PR-6 surface stays importable and functional but warns."""
+    w = workload("NN1", batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    with pytest.warns(DeprecationWarning, match="repro.exec.compile"):
+        step, ex = rexec.build_train_step(prog, mesh, adam(1e-3),
+                                          kernel_mode="ref")
+    assert isinstance(ex, ProgramExecutor) and ex.residency == "replicated"
+    with pytest.warns(DeprecationWarning, match="repro.exec.compile"):
+        step, ex = steps_lib.build_fcnn_program_step(
+            prog, mesh, kernel_mode="ref")
+    state = steps_lib.init_fcnn_program_state(
+        prog, steps_lib.TrainSettings(), jax.random.PRNGKey(0))
+    state, metrics = step(state, _batch(w, 8))
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1
+
+
+def test_degraded_runner_sharded_state_is_full_layout(mesh):
+    """The degraded runner keeps canonical full-layout state (checkpoint
+    portability across replans); its sharded step slices once at step
+    start.  One jitted step must agree bit-for-bit with the replicated
+    runner's step."""
+    from repro.exec.api import Executable
+
+    w = workload("NN1", batch_size=8)
+    prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
+    opt = adamw(1e-3)
+    params = fcnn.init(jax.random.PRNGKey(0), w.layer_sizes)
+    batch = _batch(w, 8)
+
+    exe = Executable.from_program(prog, mesh, residency="sharded",
+                                  kernel_mode="ref")
+
+    @jax.jit
+    def sharded_step(params, opt_state, batch, i):
+        sp = exe.shard_params(params)
+        loss, sgrads = jax.value_and_grad(exe.loss_fn)(sp, batch)
+        grads = exe.gather_params(sgrads)
+        return opt.update(grads, opt_state, params, i) + (loss,)
+
+    ex_r = ProgramExecutor(prog, mesh, kernel_mode="ref")
+
+    @jax.jit
+    def replicated_step(params, opt_state, batch, i):
+        loss, grads = jax.value_and_grad(ex_r.loss_fn)(params, batch)
+        return opt.update(grads, opt_state, params, i) + (loss,)
+
+    p_s, o_s, l_s = sharded_step(params, opt.init(params), batch, 0)
+    p_r, o_r, l_r = replicated_step(params, opt.init(params), batch, 0)
+    np.testing.assert_array_equal(np.asarray(l_s), np.asarray(l_r))
+    assert _trees_equal(p_s, p_r)

@@ -132,6 +132,79 @@ def test_rejects_broken_bp_mirror(prog):
         validate_program(_with_instrs(prog, instrs))
 
 
+def test_rejects_run_on_non_resident_chunks(prog):
+    """A RUN scheduled after its layer's param FREE touches freed chunks
+    (ISSUE 8 acceptance: validate_program rejects it)."""
+    l = W.l
+    instrs = list(prog.instructions)
+    pf = next(i for i in instrs if i.opcode is Opcode.FREE and i.layer == 1)
+    instrs.remove(pf)
+    idx = next(k for k, i in enumerate(instrs)
+               if i.opcode is Opcode.RUN and i.period == 2 * l)
+    instrs.insert(idx, pf)
+    with pytest.raises(ProgramValidationError, match="non-resident"):
+        validate_program(_with_instrs(prog, instrs))
+
+
+def test_rejects_param_free_byte_mismatch(prog):
+    """FREE-after-last-use now verifies *bytes*: releasing fewer bytes
+    than resident leaves the ledger undrained."""
+    instrs = list(prog.instructions)
+    idx = next(k for k, i in enumerate(instrs)
+               if i.opcode is Opcode.FREE and i.layer is not None)
+    instrs[idx] = dataclasses.replace(
+        instrs[idx], param_bytes=instrs[idx].param_bytes / 2)
+    with pytest.raises(ProgramValidationError,
+                       match="ledger would not drain"):
+        validate_program(_with_instrs(prog, instrs))
+
+
+def test_rejects_param_free_off_mirror_period(prog):
+    """Param FREEs must sit at the layer's Eq.-11 BP mirror period (the
+    chunk's last use), nowhere else."""
+    l = W.l
+    instrs = list(prog.instructions)
+    pf = next(i for i in instrs if i.opcode is Opcode.FREE and i.layer == 2)
+    instrs.remove(pf)
+    instrs.append(dataclasses.replace(pf, period=2 * l))
+    with pytest.raises(ProgramValidationError, match="BP mirror period"):
+        validate_program(_with_instrs(prog, instrs))
+
+
+def test_rejects_missing_param_free(prog):
+    instrs = [i for i in prog.instructions
+              if not (i.opcode is Opcode.FREE and i.layer == 1)]
+    with pytest.raises(ProgramValidationError,
+                       match="exactly one param FREE"):
+        validate_program(_with_instrs(prog, instrs))
+
+
+def test_rejects_param_bytes_geometry_mismatch(prog):
+    """A self-consistent but wrong byte ledger passes structurally and is
+    caught by the chunk-geometry check once workload+cfg are supplied."""
+    instrs = []
+    for i in prog.instructions:
+        if i.layer == 1:          # FP RUN, BP RUN and param FREE of layer 1
+            i = dataclasses.replace(i, param_bytes=i.param_bytes * 2)
+        instrs.append(i)
+    bad = _with_instrs(prog, instrs)
+    validate_program(bad)         # structure-only: ledger drains, passes
+    with pytest.raises(ProgramValidationError, match="chunk geometry"):
+        validate_program(bad, W, CFG)
+
+
+def test_v1_programs_skip_residency_ledger(prog):
+    """Schema-v1 programs (PR 6) have no residency annotations; the
+    ledger checks only apply from v2 on."""
+    instrs = [i for i in prog.instructions
+              if not (i.opcode is Opcode.FREE and i.layer is not None)]
+    with pytest.raises(ProgramValidationError,
+                       match="exactly one param FREE"):
+        validate_program(_with_instrs(prog, instrs))
+    v1 = dataclasses.replace(_with_instrs(prog, instrs), version=1)
+    validate_program(v1)          # same instructions, v1: accepted
+
+
 def test_compile_program_validates_by_default():
     """The compile path itself runs the verifier (validate=True default):
     sabotaging the verifier's input via a monkeypatched compile would be

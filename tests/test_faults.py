@@ -175,6 +175,61 @@ def test_expected_epoch_time_decomposition(backend):
     assert pr0.loss_period is None
 
 
+@pytest.mark.parametrize("backend", [ONoCBackend(), ENoCBackend()])
+def test_transient_retries_are_priced(backend):
+    """ISSUE 8 satellite: TRANSIENT_RUN retries inflate expected_s by the
+    re-done degraded prefix through the failed period, count times."""
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=2,
+                   device=0, count=2),))
+    pr = expected_epoch_time(W, CFG, sched, step=0, backend=backend)
+    pr0 = expected_epoch_time(W, CFG, FaultSchedule(), backend=backend)
+    assert pr.retries == 2
+    assert pr.retry_s > 0.0
+    assert pr.expected_s == pytest.approx(pr.degraded_s + pr.retry_s)
+    assert pr.expected_s > pr0.expected_s
+    # degraded/nominal prices are untouched by retry accounting
+    assert pr.degraded_s == pr0.degraded_s == pr.nominal_s
+    # the wasted work is exactly count x (compute of periods 1..2 +
+    # transitions before period 2) of the degraded epoch
+    nominal = simulate_epoch(W, CFG, strategy="orrm", backend=backend)
+    want = 2 * (sum(nominal.per_period_compute_s[:2])
+                + sum(t.comm_s for t in nominal.transitions if t.period < 2))
+    assert pr.retry_s == pytest.approx(want)
+
+
+@pytest.mark.parametrize("backend", [ONoCBackend(), ENoCBackend()])
+def test_transient_pricing_with_device_loss(backend):
+    """Only transients strictly before the loss boundary are priced; the
+    decomposition gains a retry term."""
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=1,
+                   device=2, count=1),
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=5,
+                   device=3, count=4),   # at/after the boundary: unpriced
+        FaultEvent(kind=FaultKind.DEVICE_LOSS, step=0, period=3, device=0),))
+    pr = expected_epoch_time(W, CFG, sched, step=0, backend=backend)
+    assert pr.loss_period == 3
+    assert pr.retries == 1
+    assert pr.retry_s == pytest.approx(
+        simulate_epoch(W, CFG, strategy="orrm",
+                       backend=backend).per_period_compute_s[0])
+    assert pr.expected_s == pytest.approx(
+        pr.prefix_s + pr.retry_s + pr.re_transition_s
+        + pr.replanned_epoch_s)
+
+
+def test_period_zero_transient_prices_first_run():
+    """Unpinned (period-0) transients fire at the first RUN boundary and
+    are priced as one re-done period-1 RUN."""
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=0),))
+    pr = expected_epoch_time(W, CFG, sched, step=0)
+    assert pr.retries == 1
+    assert pr.retry_s == pytest.approx(
+        simulate_epoch(W, CFG).per_period_compute_s[0])
+
+
 def test_expected_epoch_time_rejects_total_loss():
     cfg = dataclasses.replace(CFG, m=2)
     sched = FaultSchedule(events=(
