@@ -10,14 +10,24 @@
 #                     regressions or >20% median microbench speedup drop
 #   make fault-smoke  seeded device-loss replan-resume scenario on the
 #                     8-device CPU ring (the CI fault-smoke job)
+#   make lint         repo lint (tools/lint_repro.py): deprecated-shim
+#                     calls, numpy.random in jitted bodies, kernel
+#                     oracle-test coverage
+#   make bench-refresh intentional baseline refresh: re-runs the sweep
+#                     and rewrites BENCH_fcnn.json with a history snapshot
+#                     of the old baseline appended
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench-smoke bench-json bench-gate fault-smoke
+.PHONY: verify bench-smoke bench-json bench-gate bench-refresh \
+        fault-smoke lint
 
 verify:
 	$(PY) -m pytest -x -q
+
+lint:
+	$(PY) tools/lint_repro.py
 
 fault-smoke:
 	$(PY) examples/elastic_restart.py
@@ -32,3 +42,6 @@ bench-json:
 
 bench-gate:
 	$(PY) -m benchmarks.gate --baseline BENCH_fcnn.json
+
+bench-refresh:
+	$(PY) -m benchmarks.gate --baseline BENCH_fcnn.json --refresh

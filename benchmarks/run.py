@@ -39,6 +39,7 @@ from benchmarks import (  # noqa: E402
     fcnn_kernel_microbench,
     fig7_percore_sweep,
     fig10_onoc_vs_enoc,
+    program_analysis_bench,
     strategy_analysis,
     table7_prediction,
     table8_9_baselines,
@@ -57,6 +58,7 @@ BENCHMARKS = {
     "fcnn_kernel_microbench": fcnn_kernel_microbench.run,
     "softmax_xent_microbench": fcnn_kernel_microbench.run_softmax_xent,
     "exec_program_bench": exec_program_bench.run,
+    "program_analysis_bench": program_analysis_bench.run,
     "exec_residency_bench": exec_residency_bench.run,
     "fault_injection_bench": fault_injection_bench.run,
 }
@@ -169,6 +171,21 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
         ok = all(r["cost_match"] for r in rows)
         out.append(f"check,exec,program cost annotations == simulate_epoch "
                    f"({len(rows)} programs, all strategies) -> "
+                   f"{'PASS' if ok else 'FAIL'}")
+    if name == "program_analysis_bench":
+        clean = [r for r in rows if "clean" in r]
+        ok = all(r["clean"] for r in clean)
+        ops = sum(r["device_ops"] for r in clean)
+        edges = sum(r["hb_edges"] for r in clean)
+        out.append(f"check,analysis,compiled NN programs analyze clean "
+                   f"({len(clean)} programs, {ops} device-ops, {edges} "
+                   f"HB edges) -> {'PASS' if ok else 'FAIL'}")
+        corp = next(r for r in rows if r["case"] == "corruption_corpus")
+        ok = corp["corpus_ok"]
+        out.append(f"check,analysis,corruption corpus passes the validator "
+                   f"({corp['validator_passes']}/{corp['n_entries']}) but "
+                   f"is rejected by the analyzer "
+                   f"({corp['analyzer_rejects']}/{corp['n_entries']}) -> "
                    f"{'PASS' if ok else 'FAIL'}")
     if name == "exec_residency_bench":
         trs = [r for r in rows if "peak_ok" in r]

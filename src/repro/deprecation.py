@@ -1,0 +1,41 @@
+"""Warn-once deprecation helper.
+
+The deprecated execution-engine shims (``exec.runtime.build_train_step``,
+``launch.steps.build_fcnn_program_step``) are kept as thin wrappers over
+``repro.exec.compile`` for old callers — typically invoked inside
+training loops, where a per-call ``DeprecationWarning`` floods logs.
+``warn_deprecated`` emits each keyed warning exactly once per process;
+``reset`` re-arms it (tests asserting the warning fires).
+
+Python's own ``warnings`` default filter dedupes per *location*, but that
+state is invisible and routinely overridden by pytest/absl filters —
+an explicit key set is deterministic either way.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["warn_deprecated", "reset"]
+
+_warned: set[str] = set()
+
+
+def warn_deprecated(key: str, message: str, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning(message)`` once per ``key`` per process.
+
+    ``stacklevel`` defaults to 3: the caller of the deprecated shim, not
+    the shim itself.
+    """
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset(key: str | None = None) -> None:
+    """Re-arm one key (or all, when ``key`` is None)."""
+    if key is None:
+        _warned.clear()
+    else:
+        _warned.discard(key)

@@ -20,6 +20,11 @@ this package existed the repo only *priced* those schedules
     program's schema-v2 residency annotations.
   * ``exec.validate``  — static verifier: schedule invariants, the
     residency byte ledger, and the cost contract vs the simulator.
+  * ``exec.analysis``  — the per-device static analyzer (ISSUE 9):
+    expands the SPMD program into one stream per device and checks
+    happens-before (deadlocks, endpoints), chunk-granular memory safety
+    and shape/dtype abstract interpretation; runs at compile time
+    (``compile(analyze=...)``) and after every replan.
   * ``exec.api``      — the façade: ``repro.exec.compile(workload, cfg,
     mesh, strategy=..., residency=...) -> Executable`` with
     ``.train_step()`` / ``.loss_fn()`` / ``.program`` / ``.degrade()``,
@@ -29,6 +34,13 @@ this package existed the repo only *priced* those schedules
 See exec/README.md for the API and dispatch rules.
 """
 
+from repro.exec.analysis import (  # noqa: F401
+    AnalysisReport,
+    ProgramAnalysisError,
+    analyze_program,
+    corruption_corpus,
+    expand_program,
+)
 from repro.exec.api import (  # noqa: F401
     Executable,
     compile,
@@ -55,6 +67,11 @@ from repro.exec.validate import (  # noqa: F401
 __all__ = [
     "compile",
     "Executable",
+    "AnalysisReport",
+    "ProgramAnalysisError",
+    "analyze_program",
+    "corruption_corpus",
+    "expand_program",
     "Opcode",
     "Instruction",
     "PeriodProgram",

@@ -71,7 +71,16 @@ class Executable:
                      workload: FCNNWorkload | None = None,
                      cfg: ONoCConfig | None = None,
                      plan: FCNNPlan | None = None,
-                     backend: Any = None) -> "Executable":
+                     backend: Any = None,
+                     analyze: str = "off") -> "Executable":
+        """Bind an existing program to ``mesh``.  ``analyze`` defaults to
+        ``"off"`` because ``repro.exec.compile`` and the degraded-mode
+        replan path analyze before binding; pass ``"fast"``/``"full"``
+        for programs from untrusted sources (deserialized files)."""
+        if analyze != "off":
+            from repro.exec.analysis import analyze_program
+            analyze_program(program, workload, cfg, backend=backend,
+                            level=analyze)
         ex = ProgramExecutor(program, mesh, kernel_mode=kernel_mode,
                              residency=residency)
         return cls(program=program, mesh=mesh, executor=ex,
@@ -169,15 +178,28 @@ def compile(  # noqa: A001 — deliberate façade name, repro.exec.compile
     residency: str = "sharded",
     backend: Any = None,
     kernel_mode: str | None = None,
+    analyze: str = "full",
 ) -> Executable:
     """Plan (Lemma 1 on the divisor-complete ring), compile + statically
     validate the period program, and bind it to ``mesh`` as an
     ``Executable`` in the requested residency mode — the single entry
     point replacing the compile_fcnn_program / validate_program /
-    ProgramExecutor / build_*_step chain."""
+    ProgramExecutor / build_*_step chain.
+
+    ``analyze`` selects the static-analysis level (``exec.analysis``)
+    run on the compiled program before it is bound: ``"full"`` (default)
+    adds the per-device happens-before/memory checks and the shape
+    abstract interpreter on top of the validator; ``"fast"`` skips the
+    shape interpreter and the cost contract; ``"off"`` leaves only the
+    validator built into ``compile_program``.
+    """
     n = mesh.devices.size
     plan = plan_fcnn(workload, cfg, ring_mesh_axes(n), strategy=strategy)
     program = compile_program(plan, workload, cfg, n, backend=backend)
+    if analyze != "off":
+        from repro.exec.analysis import analyze_program
+        analyze_program(program, workload, cfg, backend=backend,
+                        level=analyze)
     return Executable.from_program(
         program, mesh, residency=residency, kernel_mode=kernel_mode,
         workload=workload, cfg=cfg, plan=plan, backend=backend)

@@ -115,6 +115,11 @@ class Instruction:
     # weight+bias column chunk — held by each window device for a RUN,
     # released by a param FREE (opcode FREE with ``layer`` set)
     param_bytes: float = 0.0
+    # RECV endpoint annotation: chunk j of the gathered activation comes
+    # from device ``sources[j]`` — the chunk-ordered sender window of the
+    # matching SEND.  Empty on pre-analysis programs (the analyzer then
+    # derives it from the SEND at the same period).
+    sources: tuple[int, ...] = ()
 
     @classmethod
     def RUN(cls, period, layer, phase, activation, onoc_cores, degree,
@@ -133,9 +138,9 @@ class Instruction:
                    slots=slots, hop_bytes=hop_bytes)
 
     @classmethod
-    def RECV(cls, period, receivers):
+    def RECV(cls, period, receivers, sources=()):
         return cls(opcode=Opcode.RECV, period=period,
-                   devices=tuple(receivers))
+                   devices=tuple(receivers), sources=tuple(sources))
 
     @classmethod
     def FREE(cls, period, released, layer=None, param_bytes=0.0):
@@ -207,6 +212,24 @@ class PeriodProgram:
         """Per-device resident chunk bytes of each FP layer (1-based)."""
         return {r.layer: r.param_bytes for r in self.runs(phase="fp")}
 
+    def device_stream(self, device: int) -> tuple[Instruction, ...]:
+        """The instructions that involve ``device``, in program order.
+
+        This is the raw per-device *view* (the SPMD instruction filtered
+        by membership in ``devices``); ``exec.analysis.expand_program``
+        lowers it further into concrete per-device ops with resolved
+        chunk indices and SEND/RECV endpoints.
+        """
+        if not 0 <= device < self.n_devices:
+            raise ValueError(
+                f"device {device} out of range 0..{self.n_devices - 1}")
+        return tuple(i for i in self.instructions if device in i.devices)
+
+    def device_streams(self) -> dict[int, tuple[Instruction, ...]]:
+        """``device_stream`` for every device on the ring (idle devices
+        map to an empty stream)."""
+        return {d: self.device_stream(d) for d in range(self.n_devices)}
+
     def to_json(self) -> str:
         d = {
             "version": self.version,
@@ -237,7 +260,8 @@ class PeriodProgram:
             raise ValueError(f"unsupported program version {version}")
         instrs = tuple(
             Instruction(**{**i, "opcode": Opcode(i["opcode"]),
-                           "devices": tuple(i["devices"])})
+                           "devices": tuple(i["devices"]),
+                           "sources": tuple(i.get("sources", ()))})
             for i in d["instructions"]
         )
         return cls(
@@ -345,7 +369,8 @@ def compile_program(
                 hop_bytes=tr.hop_bytes,
             ))
             instrs.append(Instruction.RECV(
-                period=i, receivers=exec_mapping.window(i + 1)))
+                period=i, receivers=exec_mapping.window(i + 1),
+                sources=window))
         released = tuple(sorted(
             set(window) - set(exec_mapping.window(i + 1))))
         if released:

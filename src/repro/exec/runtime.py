@@ -326,11 +326,11 @@ def build_train_step(
        ``repro.exec.compile(...)`` / ``Executable.from_program(...)``
        and ``Executable.train_step(optimizer)``.  Kept as a thin
        replicated-residency shim."""
-    import warnings
-    warnings.warn(
+    from repro.deprecation import warn_deprecated
+    warn_deprecated(
+        "exec.runtime.build_train_step",
         "build_train_step is deprecated; use repro.exec.compile(...) "
-        "or Executable.from_program(...).train_step(optimizer)",
-        DeprecationWarning, stacklevel=2)
+        "or Executable.from_program(...).train_step(optimizer)")
     ex = ProgramExecutor(program, mesh, kernel_mode=kernel_mode)
 
     @jax.jit

@@ -61,6 +61,8 @@ from repro.core.onoc_model import (
 from repro.core.simulator import ONoCBackend, ENoCBackend
 
 __all__ = ["ProgramValidationError", "validate_program"]
+# ProgramAnalysisError (exec.analysis.errors) subclasses
+# ProgramValidationError: importing either module gives one taxonomy.
 
 _REL_TOL = 1e-9
 
@@ -78,6 +80,7 @@ def validate_program(
     workload: FCNNWorkload | None = None,
     cfg: ONoCConfig | None = None,
     backend=None,
+    analyze: str | None = None,
 ) -> None:
     """Raise ``ProgramValidationError`` on the first violated invariant.
 
@@ -85,7 +88,22 @@ def validate_program(
     ``workload`` and ``cfg`` are provided (the compile-time path); pass the
     ``backend`` the program was compiled against to price SENDs with a
     non-default configuration.
+
+    ``analyze`` optionally delegates to the per-device static analyzer
+    (``exec.analysis.analyze_program``) after these SPMD-level checks:
+    ``"fast"`` adds the happens-before/endpoint/memory checks, ``"full"``
+    also the shape abstract interpreter.  Analyzer rejections raise
+    ``ProgramAnalysisError``, a subclass of this module's
+    ``ProgramValidationError`` — one error taxonomy for both layers.
     """
+    if analyze is not None and analyze != "off":
+        # the analyzer runs this validator as its own pre-pass, so the
+        # delegation replaces (not duplicates) the checks below
+        from repro.exec.analysis import analyze_program
+        analyze_program(program, workload, cfg, backend=backend,
+                        level=analyze)
+        return
+
     from repro.exec.program import Opcode
 
     l = program.l

@@ -144,14 +144,13 @@ def build_fcnn_program_step(
        oracle the old surface assumed.  New code should call
        ``repro.exec.compile(...)`` and ``Executable.train_step``.
     """
-    import warnings
-
+    from repro.deprecation import warn_deprecated
     from repro.exec.api import Executable
 
-    warnings.warn(
+    warn_deprecated(
+        "launch.steps.build_fcnn_program_step",
         "build_fcnn_program_step is deprecated; use repro.exec.compile(...)"
-        " or Executable.from_program(...).train_step(...)",
-        DeprecationWarning, stacklevel=2)
+        " or Executable.from_program(...).train_step(...)")
     opt = adamw(settings.learning_rate, weight_decay=settings.weight_decay)
     exe = Executable.from_program(program, mesh, residency="replicated",
                                   kernel_mode=kernel_mode)

@@ -89,6 +89,7 @@ class DegradedModeRunner:
     kernel_mode: str | None = None
     residency: str = "replicated"
     backend: Any = None
+    analyze: str = "full"               # exec.analysis level per rebuild
     checkpoint_every: int = 2
     max_retries: int = 3
     backoff_s: float = 0.01
@@ -119,8 +120,13 @@ class DegradedModeRunner:
         cfg, plan, program = self.planner.replan_program(
             n_devices, backend=self.backend)
         # compile_program already validated; re-assert explicitly so the
-        # replan path cannot lose the check if compile defaults change.
-        validate_program(program, self.workload, cfg, backend=self.backend)
+        # replan path cannot lose the check if compile defaults change,
+        # and re-run the per-device static analyzer — a replanned program
+        # for a shrunken ring is exactly where a schedule bug would
+        # surface first (exec/analysis; ``analyze="off"`` skips it).
+        validate_program(program, self.workload, cfg, backend=self.backend,
+                         analyze=None if self.analyze == "off"
+                         else self.analyze)
         self.program = program
         self._mesh = self._make_mesh(n_devices)
         # The façade re-derives residency for the survivor ring: the

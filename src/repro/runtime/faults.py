@@ -380,7 +380,15 @@ class EpochFaults:
 
 @dataclasses.dataclass(frozen=True)
 class FaultPricing:
-    """Epoch price under a failure model (see ``expected_epoch_time``)."""
+    """Epoch price under a failure model (see ``expected_epoch_time``).
+
+    ``strategy`` is the normalized mapping-strategy value every component
+    of the price was simulated under — retry/prefix pricing only matches
+    a ``simulate_epoch`` cross-check run under the *same* strategy (note
+    the defaults differ: ``expected_epoch_time`` prices ORRM while
+    ``simulate_epoch`` defaults to FM), so the constructor rejects
+    anything that is not a valid ``MappingStrategy`` value.
+    """
 
     backend: str
     strategy: str
@@ -394,6 +402,19 @@ class FaultPricing:
     expected_s: float           # the headline number
     retry_s: float = 0.0        # wasted work re-done for TRANSIENT_RUN
     retries: int = 0            # total retry attempts priced
+
+    def __post_init__(self) -> None:
+        from repro.core.allocation import MappingStrategy
+
+        try:
+            normalized = MappingStrategy(self.strategy).value
+        except ValueError:
+            raise ValueError(
+                f"FaultPricing.strategy {self.strategy!r} is not a "
+                f"MappingStrategy value "
+                f"({[s.value for s in MappingStrategy]})") from None
+        if normalized != self.strategy:
+            object.__setattr__(self, "strategy", normalized)
 
     @property
     def overhead_pct(self) -> float:
@@ -457,8 +478,15 @@ def expected_epoch_time(
     never reached, and post-replan retries belong to the next epoch's
     price.  ``retry_s`` carries the total; ``expected_s`` includes it.
     """
+    from repro.core.allocation import MappingStrategy
     from repro.core.simulator import ONoCBackend, simulate_epoch
 
+    # normalize early: every priced component (nominal, degraded, retry
+    # prefixes, the replanned epoch) must use one strategy, and the
+    # resulting FaultPricing.strategy must name it exactly — note the
+    # default here is "orrm" while simulate_epoch defaults to FM, so
+    # cross-checks must pass pricing.strategy explicitly.
+    strategy = MappingStrategy(strategy).value
     backend = backend or ONoCBackend()
     ef = EpochFaults.from_schedule(schedule, step)
     nominal = simulate_epoch(workload, cfg, strategy=strategy,

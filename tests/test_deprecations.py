@@ -1,0 +1,71 @@
+"""Warn-once deprecation shims (ISSUE 9 satellite): each deprecated
+entry point emits its DeprecationWarning exactly once per process, and
+``repro.deprecation.reset`` re-arms it."""
+
+import warnings
+
+import pytest
+
+from repro import deprecation
+from repro.configs.nn_benchmarks import onoc_config, workload
+from repro.exec.program import compile_fcnn_program
+from repro.launch.mesh import make_test_mesh
+from repro.optim.optimizers import adamw
+
+N_DEV = 8
+W = workload("NN1", batch_size=8)
+CFG = onoc_config(lambda_max=64)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh(N_DEV)
+
+
+@pytest.fixture(scope="module")
+def prog():
+    return compile_fcnn_program(W, CFG, N_DEV, "orrm")
+
+
+def _call_runtime_shim(prog, mesh):
+    from repro.exec.runtime import build_train_step
+    build_train_step(prog, mesh, adamw(1e-3))  # lint: allow-deprecated
+
+
+def _call_steps_shim(prog, mesh):
+    from repro.launch.steps import build_fcnn_program_step
+    build_fcnn_program_step(prog, mesh)  # lint: allow-deprecated
+
+
+@pytest.mark.parametrize("call,key", [
+    (_call_runtime_shim, "exec.runtime.build_train_step"),
+    (_call_steps_shim, "launch.steps.build_fcnn_program_step"),
+], ids=["exec.runtime.build_train_step",
+        "launch.steps.build_fcnn_program_step"])
+def test_shim_warns_exactly_once(call, key, prog, mesh):
+    deprecation.reset(key)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        call(prog, mesh)
+    # second call in the same process: armed key already spent, silent
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        call(prog, mesh)
+    assert [w for w in caught
+            if issubclass(w.category, DeprecationWarning)] == []
+
+
+def test_warn_once_per_key_and_reset():
+    deprecation.reset()
+    with pytest.warns(DeprecationWarning, match="gone soon"):
+        deprecation.warn_deprecated("k1", "gone soon", stacklevel=2)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        deprecation.warn_deprecated("k1", "gone soon", stacklevel=2)
+    assert caught == []
+    # a different key is independent
+    with pytest.warns(DeprecationWarning):
+        deprecation.warn_deprecated("k2", "also gone", stacklevel=2)
+    # reset(key) re-arms just that key
+    deprecation.reset("k1")
+    with pytest.warns(DeprecationWarning):
+        deprecation.warn_deprecated("k1", "gone soon", stacklevel=2)

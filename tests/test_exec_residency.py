@@ -230,14 +230,17 @@ def test_facade_rejects_bad_residency(mesh):
 
 def test_old_entry_points_are_deprecation_shims(mesh):
     """The PR-6 surface stays importable and functional but warns."""
+    from repro import deprecation
+
+    deprecation.reset()     # shims warn once per process: re-arm
     w = workload("NN1", batch_size=8)
     prog = compile_fcnn_program(w, CFG, N_DEV, "orrm")
     with pytest.warns(DeprecationWarning, match="repro.exec.compile"):
-        step, ex = rexec.build_train_step(prog, mesh, adam(1e-3),
-                                          kernel_mode="ref")
+        step, ex = rexec.build_train_step(  # lint: allow-deprecated
+            prog, mesh, adam(1e-3), kernel_mode="ref")
     assert isinstance(ex, ProgramExecutor) and ex.residency == "replicated"
     with pytest.warns(DeprecationWarning, match="repro.exec.compile"):
-        step, ex = steps_lib.build_fcnn_program_step(
+        step, ex = steps_lib.build_fcnn_program_step(  # lint: allow-deprecated
             prog, mesh, kernel_mode="ref")
     state = steps_lib.init_fcnn_program_state(
         prog, steps_lib.TrainSettings(), jax.random.PRNGKey(0))

@@ -77,7 +77,8 @@ def test_training_matches_single_device(mesh, nn):
                                        seed=7)
     opt = adam(1e-2)
 
-    step_ex, _ = build_train_step(prog, mesh, opt, kernel_mode="ref")
+    step_ex, _ = build_train_step(  # lint: allow-deprecated
+        prog, mesh, opt, kernel_mode="ref")
 
     @jax.jit
     def step_1d(params, opt_state, batch, i):
@@ -139,8 +140,8 @@ def test_build_fcnn_program_step(mesh):
     and reports finite grad norms."""
     w, prog, _, _ = _setup("NN1", 8)
     settings = steps_lib.TrainSettings(learning_rate=1e-2)
-    step, ex = steps_lib.build_fcnn_program_step(prog, mesh, settings,
-                                                 kernel_mode="ref")
+    step, ex = steps_lib.build_fcnn_program_step(  # lint: allow-deprecated
+        prog, mesh, settings, kernel_mode="ref")
     state = steps_lib.init_fcnn_program_state(prog, settings,
                                               jax.random.PRNGKey(0))
     x, y = fcnn_classification_dataset(32, input_dim=784, seed=11)

@@ -230,6 +230,54 @@ def test_period_zero_transient_prices_first_run():
         simulate_epoch(W, CFG).per_period_compute_s[0])
 
 
+@pytest.mark.parametrize("backend", [ONoCBackend(), ENoCBackend()])
+@pytest.mark.parametrize("strategy", ["fm", "rrm", "orrm"])
+def test_retry_pricing_matches_simulate_under_same_strategy(backend,
+                                                            strategy):
+    """ISSUE 9 satellite (the PR-8 footgun): ``expected_epoch_time``
+    defaults to ORRM while ``simulate_epoch`` defaults to FM, so a retry
+    cross-check silently mismatches unless both use one strategy.  The
+    pricing must carry its normalized strategy and its retry term must
+    equal the re-done prefix of a simulation under *that* strategy, for
+    every strategy x backend."""
+    from repro.core.allocation import MappingStrategy
+
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=3,
+                   device=0, count=2),))
+    pr = expected_epoch_time(W, CFG, sched, step=0, strategy=strategy,
+                             backend=backend)
+    assert pr.strategy == strategy
+    # enum input normalizes to the same value
+    pr_enum = expected_epoch_time(W, CFG, sched, step=0,
+                                  strategy=MappingStrategy(strategy),
+                                  backend=backend)
+    assert pr_enum.strategy == strategy
+    trace = simulate_epoch(W, CFG, strategy=strategy, backend=backend)
+    want = 2 * (sum(trace.per_period_compute_s[:3])
+                + sum(t.comm_s for t in trace.transitions if t.period < 3))
+    assert pr.retry_s == pytest.approx(want)
+    assert pr.expected_s == pytest.approx(pr.degraded_s + pr.retry_s)
+
+
+def test_fault_pricing_rejects_unknown_strategy():
+    with pytest.raises(ValueError, match="MappingStrategy|not a valid"):
+        expected_epoch_time(W, CFG, FaultSchedule(), strategy="zigzag")
+
+
+def test_cross_strategy_retry_prefixes_differ_on_enoc():
+    """The footgun is real: the same transient's retry price differs
+    across strategies on ENoC (placement changes transition comm), so a
+    cross-strategy comparison would silently be wrong."""
+    sched = FaultSchedule(events=(
+        FaultEvent(kind=FaultKind.TRANSIENT_RUN, step=0, period=4,
+                   device=0, count=1),))
+    prices = {s: expected_epoch_time(W, CFG, sched, step=0, strategy=s,
+                                     backend=ENoCBackend()).retry_s
+              for s in ("fm", "rrm", "orrm")}
+    assert len({round(v, 15) for v in prices.values()}) > 1, prices
+
+
 def test_expected_epoch_time_rejects_total_loss():
     cfg = dataclasses.replace(CFG, m=2)
     sched = FaultSchedule(events=(

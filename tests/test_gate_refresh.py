@@ -1,0 +1,82 @@
+"""Baseline refresh flow (ISSUE 9 satellite: benchmarks/gate.py
+--refresh): snapshot + history append, the min-reducer merge, and the
+guarantee that ``compare`` never reads the history trail."""
+
+import statistics
+
+from benchmarks.gate import (
+    baseline_snapshot,
+    compare,
+    merge_ratio_stats,
+    refresh_baseline,
+)
+
+
+def _report(speedup=2.0, check="check,table7,plateau -> PASS"):
+    return {
+        "checks": [check],
+        "benchmarks": {
+            "softmax_xent_microbench": {
+                "rows": [{"case": "b64", "fwd_speedup": speedup,
+                          "fwdbwd_speedup": speedup + 0.5}],
+            },
+        },
+    }
+
+
+def test_baseline_snapshot_summarizes_checks_and_ratios():
+    snap = baseline_snapshot(_report(speedup=2.0))
+    assert snap["checks_pass"] == 1
+    assert snap["checks_fail"] == 0
+    assert snap["n_benchmarks"] == 1
+    assert snap["ratios"] == {
+        "softmax_xent_microbench/b64/fwd_speedup": 2.0,
+        "softmax_xent_microbench/b64/fwdbwd_speedup": 2.5,
+    }
+
+
+def test_refresh_appends_history_and_keeps_prior_trail():
+    base = _report(speedup=2.0)
+    cur = _report(speedup=1.5)
+    refreshed = refresh_baseline(base, cur, stamp="2026-08-08T00:00:00Z")
+    assert refreshed["benchmarks"] == cur["benchmarks"]  # new numbers win
+    (entry,) = refreshed["history"]
+    assert entry["refreshed"] == "2026-08-08T00:00:00Z"
+    assert entry["previous"] == baseline_snapshot(base)
+    # a second refresh extends, never rewrites, the trail
+    again = refresh_baseline(refreshed, _report(speedup=1.8), stamp="later")
+    assert [e["refreshed"] for e in again["history"]] == [
+        "2026-08-08T00:00:00Z", "later"]
+    assert again["history"][1]["previous"] == baseline_snapshot(refreshed)
+
+
+def test_refresh_merge_uses_min_not_median():
+    """Refresh snapshots the per-case minimum across repeats — the
+    conservative floor — while gating keeps the median."""
+    reports = [_report(speedup=s) for s in (2.0, 1.2, 3.0)]
+    floor = merge_ratio_stats([dict(r, benchmarks={
+        k: {"rows": [dict(row) for row in v["rows"]]}
+        for k, v in r["benchmarks"].items()}) for r in reports], min)
+    row = floor["benchmarks"]["softmax_xent_microbench"]["rows"][0]
+    assert row["fwd_speedup"] == 1.2
+    med = merge_ratio_stats(reports, statistics.median)
+    row = med["benchmarks"]["softmax_xent_microbench"]["rows"][0]
+    assert row["fwd_speedup"] == 2.0
+
+
+def test_compare_ignores_history():
+    base = refresh_baseline(_report(2.0), _report(2.0), stamp="x")
+    assert compare(base, _report(2.0), slowdown=0.20) == []
+    # regressions are still caught with history present
+    failures = compare(base, _report(1.0), slowdown=0.20)
+    assert any("fwd_speedup" in f for f in failures)
+
+
+def test_refreshed_baseline_relaxes_the_gate():
+    """The point of --refresh: after accepting a slower baseline, the
+    same slower report passes the gate."""
+    old = _report(speedup=2.0)
+    slower = _report(speedup=1.5)
+    assert compare(old, slower, slowdown=0.20)          # gated out before
+    new_base = refresh_baseline(old, slower, stamp="x")
+    assert compare(new_base, slower, slowdown=0.20) == []

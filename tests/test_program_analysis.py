@@ -1,0 +1,253 @@
+"""Per-device static program analyzer (ISSUE 9): expansion, happens-before
+deadlock detection, chunk-level memory walk, shape abstract interpretation
+— and the seeded corruption corpus that ``validate_program`` passes but
+``analyze_program`` must reject with a precise error."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs.nn_benchmarks import NN_BENCHMARKS, onoc_config, workload
+from repro.core.allocation import MappingStrategy
+from repro.exec.analysis import (
+    LEVELS,
+    DeviceOp,
+    ProgramAnalysisError,
+    analyze_program,
+    check_memory,
+    corruption_corpus,
+    expand_program,
+    n_device_ops,
+)
+from repro.exec.program import Opcode, PeriodProgram, compile_fcnn_program
+from repro.exec.validate import ProgramValidationError, validate_program
+from repro.launch.mesh import make_test_mesh
+
+import repro.exec as rexec
+
+N_DEV = 8
+W = workload("NN1", batch_size=8)
+CFG = onoc_config(lambda_max=64)
+
+PROG = compile_fcnn_program(W, CFG, N_DEV, "orrm")
+CORPUS = corruption_corpus(PROG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh(N_DEV)
+
+
+# ------------------------------------------------------------- clean pass
+
+@pytest.mark.parametrize("residency", ["sharded", "replicated"])
+@pytest.mark.parametrize("strategy", list(MappingStrategy))
+@pytest.mark.parametrize("name", sorted(NN_BENCHMARKS))
+def test_compiled_programs_analyze_clean(name, strategy, residency, mesh):
+    """Acceptance sweep: every program produced by ``repro.exec.compile``
+    for NN1..NN6 x {fm,rrm,orrm} x {sharded,replicated} passes the full
+    analyzer (``analyze="full"`` is the compile default)."""
+    w = workload(name, batch_size=8)
+    exe = rexec.compile(w, CFG, mesh, strategy, residency=residency)
+    report = analyze_program(exe.program, w, CFG, level="full")
+    assert report.level == "full"
+    assert report.n_devices == N_DEV
+    assert report.n_instructions == len(exe.program.instructions)
+    assert report.checks == ("validate", "expand", "endpoints",
+                             "happens-before", "memory", "shapes")
+    assert report.n_hb_edges > report.n_device_ops > 0
+
+
+def test_analyze_levels():
+    assert analyze_program(PROG, level="off") is None
+    fast = analyze_program(PROG, level="fast")
+    assert "shapes" not in fast.checks
+    full = analyze_program(PROG, W, CFG, level="full")
+    assert "shapes" in full.checks
+    assert full.n_hb_edges == fast.n_hb_edges
+    with pytest.raises(ValueError, match="analyze level"):
+        analyze_program(PROG, level="bogus")
+    assert LEVELS == ("off", "fast", "full")
+
+
+def test_analysis_error_is_a_validation_error():
+    """One error taxonomy: handlers catching ProgramValidationError keep
+    working when the analyzer is switched on."""
+    assert issubclass(ProgramAnalysisError, ProgramValidationError)
+
+
+def test_validate_program_delegates_to_analyzer():
+    validate_program(PROG, W, CFG, analyze="full")
+    corrupted = CORPUS[0].program
+    validate_program(corrupted, W, CFG)  # SPMD validator alone: blind
+    with pytest.raises(ProgramAnalysisError, match=CORPUS[0].match):
+        validate_program(corrupted, W, CFG, analyze="fast")
+
+
+def test_compile_rejects_bad_analyze_level(mesh):
+    with pytest.raises(ValueError, match="analyze level"):
+        rexec.compile(W, CFG, mesh, "orrm", analyze="bogus")
+
+
+# -------------------------------------------------------------- expansion
+
+def test_expansion_covers_every_device_in_program_order():
+    streams = expand_program(PROG)
+    assert sorted(streams) == list(range(N_DEV))
+    assert n_device_ops(streams) == sum(
+        len(i.devices) for i in PROG.instructions)
+    for d, ops in streams.items():
+        assert all(op.device == d for op in ops)
+        indices = [op.index for op in ops]
+        assert indices == sorted(indices)  # program order preserved
+
+
+def test_expansion_resolves_chunks_and_endpoints():
+    streams = expand_program(PROG)
+    recvs = {i.period: i for i in PROG.instructions
+             if i.opcode is Opcode.RECV}
+    for ins in PROG.instructions:
+        if ins.opcode is Opcode.RUN:
+            for j, d in enumerate(ins.devices):
+                op = next(o for o in streams[d]
+                          if o.op == "run" and o.period == ins.period)
+                assert op.chunk == j  # chunk j computed by window[j]
+                assert op.chunk_width == ins.chunk_width
+        elif ins.opcode is Opcode.SEND:
+            recv = recvs[ins.period]
+            for d in ins.devices:
+                op = next(o for o in streams[d]
+                          if o.op == "send" and o.period == ins.period)
+                assert op.peers == tuple(recv.devices)
+        elif ins.opcode is Opcode.RECV:
+            for d in ins.devices:
+                op = next(o for o in streams[d]
+                          if o.op == "recv" and o.period == ins.period)
+                assert op.peers == tuple(ins.sources)
+
+
+def test_device_stream_helpers():
+    for d in range(N_DEV):
+        stream = PROG.device_stream(d)
+        assert all(d in i.devices for i in stream)
+    assert sorted(PROG.device_streams()) == list(range(N_DEV))
+    with pytest.raises(ValueError, match="device 8 out of range"):
+        PROG.device_stream(N_DEV)
+    with pytest.raises(ValueError, match="out of range"):
+        PROG.device_stream(-1)
+
+
+def test_recv_sources_survive_json_roundtrip():
+    back = PeriodProgram.from_json(json.loads(json.dumps(PROG.to_json())))
+    for a, b in zip(PROG.instructions, back.instructions):
+        assert a.sources == b.sources
+    analyze_program(back, W, CFG, level="full")
+
+
+def test_recv_without_sources_derives_from_send():
+    """Programs serialized before the ``sources`` annotation existed
+    still analyze: endpoints fall back to the same-period SEND window."""
+    stripped = dataclasses.replace(PROG, instructions=tuple(
+        dataclasses.replace(i, sources=())
+        if i.opcode is Opcode.RECV else i
+        for i in PROG.instructions))
+    report = analyze_program(stripped, W, CFG, level="full")
+    assert report is not None
+
+
+# ------------------------------------------------------ corruption corpus
+
+def test_corpus_is_complete_and_deterministic():
+    assert [e.name for e in CORPUS] == [
+        "deadlocked-send-cycle",
+        "swapped-recv-source",
+        "free-before-last-use",
+        "shape-mismatched-run-batch",
+        "shape-mismatched-run-activation",
+    ]
+    again = corruption_corpus(PROG, seed=0)
+    assert [(e.name, e.description) for e in again] == \
+           [(e.name, e.description) for e in CORPUS]
+
+
+@pytest.mark.parametrize("entry", CORPUS, ids=lambda e: e.name)
+def test_corpus_passes_validator_but_analyzer_rejects(entry):
+    """The whole point of the corpus: each corruption sits in a blind
+    spot of the SPMD validator and only the per-device analyzer sees it."""
+    validate_program(entry.program, W, CFG)
+    with pytest.raises(ProgramAnalysisError, match=entry.match):
+        analyze_program(entry.program, W, CFG, level="full")
+
+
+@pytest.mark.parametrize(
+    "entry",
+    [e for e in CORPUS if not e.name.startswith("shape-")],
+    ids=lambda e: e.name)
+def test_structural_corruptions_rejected_at_fast_level(entry):
+    """Deadlock/endpoint/memory corruptions need no workload: level
+    ``"fast"`` (no cost contract, no shape interpreter) catches them."""
+    with pytest.raises(ProgramAnalysisError, match=entry.match):
+        analyze_program(entry.program, level="fast")
+
+
+def test_deadlock_message_names_the_cycle():
+    entry = next(e for e in CORPUS if e.name == "deadlocked-send-cycle")
+    with pytest.raises(ProgramAnalysisError) as err:
+        analyze_program(entry.program, level="fast")
+    msg = str(err.value)
+    assert "deadlock" in msg
+    assert "RECV period" in msg and "SEND period" in msg  # cycle chain
+    assert "device" in msg
+
+
+def test_corpus_errors_name_device_and_period():
+    for entry in CORPUS:
+        with pytest.raises(ProgramAnalysisError) as err:
+            analyze_program(entry.program, W, CFG, level="full")
+        assert "period" in str(err.value), entry.name
+
+
+# ----------------------------------------------- memory walk (synthetic)
+
+def _run(d, idx, period, layer, phase="fp", **kw):
+    return DeviceOp(device=d, index=idx, op="run", period=period,
+                    layer=layer, phase=phase, chunk=0, chunk_width=1, **kw)
+
+
+def test_check_memory_rejects_double_window_free():
+    ops = (
+        _run(0, 0, 1, 1),
+        DeviceOp(device=0, index=1, op="free", period=1,
+                 free_kind="window"),
+        DeviceOp(device=0, index=2, op="free", period=1,
+                 free_kind="window"),
+    )
+    with pytest.raises(ProgramAnalysisError,
+                       match="double FREE.*device 0.*freed at period 1"):
+        check_memory({0: ops}, l=1, fp_windows={1: (0,)},
+                     check_params=False)
+
+
+def test_check_memory_rejects_param_double_free_and_leak():
+    free = DeviceOp(device=0, index=2, op="free", period=2, layer=1,
+                    free_kind="param")
+    with pytest.raises(ProgramAnalysisError, match="double FREE: param"):
+        check_memory({0: (_run(0, 0, 1, 1), free,
+                          dataclasses.replace(free, index=3, period=3))},
+                     l=1, fp_windows={1: (0,)})
+    with pytest.raises(ProgramAnalysisError,
+                       match="residency leak: device 0"):
+        check_memory({0: (_run(0, 0, 1, 1),)}, l=1, fp_windows={1: (0,)})
+
+
+def test_check_memory_rejects_run_after_param_free():
+    ops = (
+        _run(0, 0, 1, 1),
+        DeviceOp(device=0, index=1, op="free", period=1, layer=1,
+                 free_kind="param"),
+        _run(0, 2, 2, 1, phase="bp"),
+    )
+    with pytest.raises(ProgramAnalysisError,
+                       match="use-after-FREE: RUN period 2"):
+        check_memory({0: ops}, l=1, fp_windows={1: (0,)})

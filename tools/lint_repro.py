@@ -1,0 +1,330 @@
+#!/usr/bin/env python
+"""Repo lint (``make lint``): AST-enforced invariants pytest cannot see.
+
+Three rules, all pure-stdlib ``ast`` (no third-party linter needed):
+
+  deprecated-call     No calls to the deprecated execution-engine shims
+                      (``repro.exec.runtime.build_train_step``, its
+                      ``repro.exec`` re-export, and
+                      ``repro.launch.steps.build_fcnn_program_step``)
+                      outside their own defining modules.  Aliased
+                      imports are resolved (``import repro.exec as rexec;
+                      rexec.build_train_step(...)`` is caught).  The
+                      non-deprecated generic ``launch.steps
+                      .build_train_step`` is distinguished by its fully
+                      qualified name.  Suppress intentional uses (the
+                      shims' own regression tests) with a
+                      ``# lint: allow-deprecated`` comment on the line.
+
+  np-random-in-jit    No ``numpy.random`` use inside jitted or
+                      shard_map'd function bodies: host RNG silently
+                      bakes one sample into the trace, a classic
+                      wrong-numerics bug.  Functions count as traced
+                      when decorated with ``jax.jit``/``jit`` (directly
+                      or via ``functools.partial``) or passed by name to
+                      ``jax.jit(...)``/``shard_map(...)``.  Suppress
+                      with ``# lint: allow-np-random``.
+
+  kernel-coverage     Every kernel module under ``src/repro/kernels/``
+                      must be exercised by an oracle test: some file in
+                      ``tests/`` must reference at least one of the
+                      module's public functions (by name or attribute —
+                      ``ops.flash_attention`` covers
+                      ``kernels/flash_attention.py``), so a new Pallas
+                      kernel cannot land without a test pinning it to
+                      its reference implementation.
+
+Exit status 1 when any violation is found; output is
+``path:line: [rule] message`` per violation.  Used by ``make lint`` and
+the CI ``lint`` job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import sys
+
+DEPRECATED_CALLS = {
+    "repro.exec.runtime.build_train_step",
+    "repro.exec.build_train_step",
+    "repro.launch.steps.build_fcnn_program_step",
+}
+# the shims' own modules (and the package façade re-exporting them)
+DEPRECATED_HOMES = {
+    os.path.join("src", "repro", "exec", "runtime.py"),
+    os.path.join("src", "repro", "exec", "__init__.py"),
+    os.path.join("src", "repro", "launch", "steps.py"),
+}
+
+JIT_WRAPPERS = {"jax.jit", "jit", "jax.pmap", "pmap"}
+SHARD_WRAPPERS = {"shard_map", "jax.shard_map",
+                  "jax.experimental.shard_map.shard_map"}
+
+PRAGMA_DEPRECATED = "lint: allow-deprecated"
+PRAGMA_NP_RANDOM = "lint: allow-np-random"
+
+LINT_PATHS = ("src", "tools", "tests", "benchmarks", "examples")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class _Aliases(ast.NodeVisitor):
+    """Map local names to fully qualified import origins."""
+
+    def __init__(self) -> None:
+        self.names: dict[str, str] = {}
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.names[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level:       # relative imports: not used in this repo
+            return
+        for a in node.names:
+            self.names[a.asname or a.name] = f"{node.module}.{a.name}"
+
+
+def _resolve(dotted: str, aliases: dict[str, str]) -> str:
+    head, _, rest = dotted.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def _has_pragma(lines: list[str], lineno: int, pragma: str) -> bool:
+    return 0 < lineno <= len(lines) and pragma in lines[lineno - 1]
+
+
+# ------------------------------------------------------- deprecated-call
+
+def _check_deprecated(tree: ast.AST, aliases: dict[str, str],
+                      path: str, lines: list[str]) -> list[Violation]:
+    rel = os.path.relpath(path)
+    if any(rel.endswith(home) for home in DEPRECATED_HOMES):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted is None:
+            continue
+        fq = _resolve(dotted, aliases)
+        if fq in DEPRECATED_CALLS:
+            if _has_pragma(lines, node.lineno, PRAGMA_DEPRECATED):
+                continue
+            out.append(Violation(
+                path, node.lineno, "deprecated-call",
+                f"call to deprecated shim {fq} — use repro.exec.compile "
+                f"(suppress intentional uses with "
+                f"`# {PRAGMA_DEPRECATED}`)"))
+    return out
+
+
+# ------------------------------------------------------ np-random-in-jit
+
+def _numpy_aliases(aliases: dict[str, str]) -> dict[str, str]:
+    """Local names that resolve into the numpy package."""
+    return {name: fq for name, fq in aliases.items()
+            if fq == "numpy" or fq.startswith("numpy.")}
+
+
+def _jit_roots(tree: ast.AST, aliases: dict[str, str]) -> list[ast.AST]:
+    """Function defs whose bodies are traced: jit/pmap-decorated, or
+    passed by name to jax.jit(...)/shard_map(...)."""
+    defs: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    def is_jit_expr(expr: ast.AST) -> bool:
+        dotted = _dotted(expr)
+        if dotted is not None and _resolve(dotted, aliases) in (
+                JIT_WRAPPERS | {"functools.partial", "partial"}):
+            return dotted not in ("functools.partial", "partial")
+        return False
+
+    roots: list[ast.AST] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                dotted = _dotted(target)
+                fq = _resolve(dotted, aliases) if dotted else None
+                if fq in JIT_WRAPPERS:
+                    roots.append(node)
+                elif fq in ("functools.partial", "partial") and isinstance(
+                        dec, ast.Call):
+                    if any(is_jit_expr(a) for a in dec.args):
+                        roots.append(node)
+        elif isinstance(node, ast.Call):
+            dotted = _dotted(node.func)
+            fq = _resolve(dotted, aliases) if dotted else None
+            if fq in (JIT_WRAPPERS | SHARD_WRAPPERS) and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Name) and arg.id in defs:
+                    roots.extend(defs[arg.id])
+    return roots
+
+
+def _check_np_random(tree: ast.AST, aliases: dict[str, str],
+                     path: str, lines: list[str]) -> list[Violation]:
+    np_names = _numpy_aliases(aliases)
+    if not np_names:
+        return []
+    out = []
+    seen: set[int] = set()
+    for root in _jit_roots(tree, aliases):
+        for node in ast.walk(root):
+            dotted = None
+            if isinstance(node, (ast.Attribute, ast.Name)):
+                dotted = _dotted(node)
+            if dotted is None:
+                continue
+            fq = _resolve(dotted, np_names)
+            if (fq == "numpy.random" or fq.startswith("numpy.random.")) \
+                    and node.lineno not in seen:
+                if _has_pragma(lines, node.lineno, PRAGMA_NP_RANDOM):
+                    continue
+                seen.add(node.lineno)
+                out.append(Violation(
+                    path, node.lineno, "np-random-in-jit",
+                    f"numpy.random used inside traced function "
+                    f"{getattr(root, 'name', '?')!r} — host RNG bakes one "
+                    f"sample into the jitted trace; thread a jax PRNG key "
+                    f"instead (suppress with `# {PRAGMA_NP_RANDOM}`)"))
+    return out
+
+
+# -------------------------------------------------------- kernel-coverage
+
+def _public_functions(path: str) -> list[str]:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    return [n.name for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and not n.name.startswith("_")]
+
+
+def check_kernel_coverage(repo_root: str = ".") -> list[Violation]:
+    """Every kernels/ module must have a public symbol referenced by some
+    test (oracle tests pin each kernel to its reference implementation)."""
+    kdir = os.path.join(repo_root, "src", "repro", "kernels")
+    tdir = os.path.join(repo_root, "tests")
+    if not (os.path.isdir(kdir) and os.path.isdir(tdir)):
+        return []
+
+    referenced: set[str] = set()
+    for fname in sorted(os.listdir(tdir)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(tdir, fname)) as f:
+            tree = ast.parse(f.read(), filename=fname)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute):
+                referenced.add(node.attr)
+            elif isinstance(node, ast.Name):
+                referenced.add(node.id)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                referenced.update(a.name for a in node.names)
+
+    out = []
+    for fname in sorted(os.listdir(kdir)):
+        if not fname.endswith(".py") or fname == "__init__.py":
+            continue
+        kpath = os.path.join(kdir, fname)
+        public = _public_functions(kpath)
+        if public and not any(fn in referenced for fn in public):
+            out.append(Violation(
+                kpath, 1, "kernel-coverage",
+                f"kernel module {fname} defines {public} but no test in "
+                f"tests/ references any of them — add an oracle test "
+                f"pinning the kernel to its reference implementation"))
+    return out
+
+
+# ----------------------------------------------------------------- driver
+
+def lint_source(source: str, path: str = "<string>") -> list[Violation]:
+    """Per-file rules (deprecated-call, np-random-in-jit) on one source
+    string — the unit-testable core."""
+    tree = ast.parse(source, filename=path)
+    aliases = _Aliases()
+    aliases.visit(tree)
+    lines = source.splitlines()
+    out = _check_deprecated(tree, aliases.names, path, lines)
+    out += _check_np_random(tree, aliases.names, path, lines)
+    return out
+
+
+def lint_file(path: str) -> list[Violation]:
+    with open(path) as f:
+        source = f.read()
+    try:
+        return lint_source(source, path)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 1, "syntax",
+                          f"could not parse: {e.msg}")]
+
+
+def iter_py_files(root: str, paths=LINT_PATHS):
+    for rel in paths:
+        top = os.path.join(root, rel)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fname in sorted(filenames):
+                if fname.endswith(".py"):
+                    yield os.path.join(dirpath, fname)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".", help="repo root to lint")
+    args = ap.parse_args(argv)
+
+    violations: list[Violation] = []
+    n_files = 0
+    for path in iter_py_files(args.root):
+        n_files += 1
+        violations.extend(lint_file(path))
+    violations.extend(check_kernel_coverage(args.root))
+
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"lint: {len(violations)} violation(s) in {n_files} files")
+        return 1
+    print(f"lint: OK ({n_files} files, 3 rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
