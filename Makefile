@@ -10,6 +10,9 @@
 #                     regressions or >20% median microbench speedup drop
 #   make fault-smoke  seeded device-loss replan-resume scenario on the
 #                     8-device CPU ring (the CI fault-smoke job)
+#   make serve-smoke  steady + burst traffic presets through the
+#                     continuous-batching serving engine on the smoke
+#                     config (the CI serve-smoke job)
 #   make lint         repo lint (tools/lint_repro.py): deprecated-shim
 #                     calls, numpy.random in jitted bodies, kernel
 #                     oracle-test coverage
@@ -21,7 +24,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify bench-smoke bench-json bench-gate bench-refresh \
-        fault-smoke lint
+        fault-smoke serve-smoke lint
 
 verify:
 	$(PY) -m pytest -x -q
@@ -32,6 +35,12 @@ lint:
 fault-smoke:
 	$(PY) examples/elastic_restart.py
 	$(PY) -m benchmarks.run --only fault_injection_bench
+
+serve-smoke:
+	$(PY) -m repro.launch.serve --arch qwen3-14b --smoke \
+		--scenario steady --requests 8 --slots 3 --seed 0
+	$(PY) -m repro.launch.serve --arch qwen3-14b --smoke \
+		--scenario burst --requests 12 --slots 3 --seed 0
 
 bench-smoke:
 	$(PY) -m benchmarks.run --only table7_prediction

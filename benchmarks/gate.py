@@ -52,6 +52,8 @@ def _ratio_fields(name: str) -> tuple[str, ...]:
         return ("fwd_speedup", "fwdbwd_speedup")
     if name == "exec_residency_bench":
         return ("replicated_over_sharded_step",)
+    if name == "serving_bench":
+        return ("tok_s_ratio", "p99_ttft_ratio")
     return ()
 
 

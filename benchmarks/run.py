@@ -40,6 +40,7 @@ from benchmarks import (  # noqa: E402
     fig7_percore_sweep,
     fig10_onoc_vs_enoc,
     program_analysis_bench,
+    serving_bench,
     strategy_analysis,
     table7_prediction,
     table8_9_baselines,
@@ -61,6 +62,7 @@ BENCHMARKS = {
     "program_analysis_bench": program_analysis_bench.run,
     "exec_residency_bench": exec_residency_bench.run,
     "fault_injection_bench": fault_injection_bench.run,
+    "serving_bench": serving_bench.run,
 }
 
 
@@ -223,6 +225,21 @@ def _reproduction_checks(name: str, rows: list[dict]) -> list[str]:
                 f"from-scratch run on survivors "
                 f"(max loss diff {rec['max_loss_diff_vs_scratch']:.2e}) -> "
                 f"{'PASS' if ok else 'FAIL'}")
+    if name == "serving_bench":
+        scen = [r for r in rows if "finished_once" in r]
+        ok = all(r["finished_once"] for r in scen)
+        total = sum(r["n_finished"] for r in scen)
+        out.append(f"check,serve,every submitted request finishes exactly "
+                   f"once across {len(scen)} scenario presets "
+                   f"({total} requests) -> {'PASS' if ok else 'FAIL'}")
+        pin = next(r for r in rows if r["case"] == "device_loss_pin")
+        ok = (pin["streams_match"] and pin["replans"] >= 1
+              and pin["n_restarts"] >= 1)
+        out.append(f"check,serve,device-loss-mid-decode replan keeps token "
+                   f"streams identical to the no-fault run "
+                   f"({pin['n_compared']} streams, {pin['replans']} replans, "
+                   f"{pin['n_restarts']} restarts) -> "
+                   f"{'PASS' if ok else 'FAIL'}")
     if name == "fcnn_kernel_microbench":
         out.append(_microbench_check(rows, "fused fwd+bwd vs einsum"))
     if name == "softmax_xent_microbench":

@@ -1,0 +1,116 @@
+"""Serving SLO benchmark: every traffic scenario preset through the
+continuous-batching engine (``repro.serve``) on the smoke LM.
+
+One row per scenario with the full SLO report (TTFT/TPOT/e2e p50+p99,
+throughput, goodput) plus two same-box timing *ratios* the regression
+gate tracks (``gate._ratio_fields``):
+
+  tok_s_ratio     scenario throughput / steady throughput
+  p99_ttft_ratio  steady p99 TTFT / scenario p99 TTFT
+
+(steady is the anchor row at 1.0; both sides of each ratio run in the
+same process on the same machine, so the ratios are comparable across
+reports the way the microbench speedups are).
+
+The device-loss-mid-decode scenario is additionally *pinned*: a no-fault
+reference run of the same trace (fresh runner, same params seed, same
+slot count) must produce bit-identical token streams for every request —
+greedy decode is a pure function of the prompt, so a mid-decode replan +
+restart may cost latency but never tokens.  ``run.py`` turns the pin and
+the finished-exactly-once invariant into PASS/FAIL checks gated against
+``BENCH_fcnn.json``.
+"""
+
+from __future__ import annotations
+
+from repro.configs import smoke_config
+from repro.serve import (
+    JaxModelRunner,
+    SCENARIO_NAMES,
+    ServeAutoscaler,
+    ServingEngine,
+    make_traffic,
+    scenario_preset,
+    snap_prompt_buckets,
+)
+
+ARCH = "qwen3-14b"
+SEED = 0
+SLOTS = 3
+# smoke-sized traffic: small bucket lists (2 prefill compiles), enough
+# decode steps for the mid-decode loss to land while requests are in
+# flight (preset fires at global decode step 4)
+_OVERRIDES = dict(n_requests=10, prompt_buckets=(8, 16),
+                  gen_buckets=(4, 8, 12))
+
+
+def _run_scenario(cfg, sc, *, with_fault: bool = True):
+    trace = make_traffic(sc, SEED)
+    runner = JaxModelRunner(cfg, n_slots=SLOTS, max_len=sc.max_len)
+    runner.warmup(sc.prompt_buckets)
+    autoscaler = ServeAutoscaler(runner.n_devices, SLOTS)
+    engine = ServingEngine(runner, n_slots=SLOTS, autoscaler=autoscaler)
+    run_sc = sc if with_fault else sc.replace(device_loss=None)
+    return engine.run(trace, run_sc), trace
+
+
+def run() -> list[dict]:
+    cfg = smoke_config(ARCH)
+    rows: list[dict] = []
+    results = {}
+    for name in SCENARIO_NAMES:
+        sc = scenario_preset(name, **_OVERRIDES)
+        sc = sc.replace(
+            prompt_buckets=snap_prompt_buckets(cfg, sc.prompt_buckets))
+        result, trace = _run_scenario(cfg, sc)
+        results[name] = (sc, trace, result)
+
+    steady = results["steady"][2].slo
+    for name in SCENARIO_NAMES:
+        sc, trace, result = results[name]
+        slo = result.slo
+        submitted = set(trace.rids)
+        finished_once = (set(result.streams) == submitted
+                         and slo.n_finished == len(submitted))
+        rows.append({
+            "case": name,
+            "n_requests": slo.n_submitted,
+            "n_finished": slo.n_finished,
+            "finished_once": finished_once,
+            "n_prefills": result.n_prefills,
+            "n_decode_steps": result.n_decode_steps,
+            "n_restarts": slo.n_restarts,
+            "replans": len(result.replans),
+            "p50_ttft_s": slo.p50_ttft_s,
+            "p99_ttft_s": slo.p99_ttft_s,
+            "p50_tpot_s": slo.p50_tpot_s,
+            "p99_tpot_s": slo.p99_tpot_s,
+            "p50_e2e_s": slo.p50_e2e_s,
+            "p99_e2e_s": slo.p99_e2e_s,
+            "throughput_tok_s": slo.throughput_tok_s,
+            "goodput_tok_s": slo.goodput_tok_s,
+            "tok_s_ratio": (slo.throughput_tok_s
+                            / max(steady.throughput_tok_s, 1e-9)),
+            "p99_ttft_ratio": (steady.p99_ttft_s
+                               / max(slo.p99_ttft_s, 1e-9)),
+        })
+
+    # device-loss pin: the same trace with the fault disabled must yield
+    # identical token streams for every request
+    sc, trace, faulted = results["device-loss-mid-decode"]
+    reference, _ = _run_scenario(cfg, sc, with_fault=False)
+    compared = sorted(set(faulted.streams) & set(reference.streams))
+    match = (set(faulted.streams) == set(reference.streams)
+             and all(faulted.streams[r] == reference.streams[r]
+                     for r in compared))
+    rows.append({
+        "case": "device_loss_pin",
+        "n_compared": len(compared),
+        "streams_match": match,
+        "replans": len(faulted.replans),
+        "n_restarts": faulted.slo.n_restarts,
+        "replan_reasons": [rp.reason for rp in faulted.replans],
+        "lemma1_cores": [list(rp.lemma1_cores or ())
+                         for rp in faulted.replans],
+    })
+    return rows

@@ -1,10 +1,16 @@
-"""Serve a small LM with batched requests through the continuous-batching
-slot manager (prefill + decode with KV cache).
+"""Serve a small LM through the continuous-batching subsystem
+(``repro.serve``): seeded open-loop traffic, per-slot admission prefill,
+batched decode, SLO report.
 
   PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-14b]
+                                             [--scenario steady]
 
-Uses the smoke-sized config of the chosen architecture so it runs on CPU;
-on a TPU mesh the identical code path serves the full config.
+Runs the chosen traffic preset (steady | burst | drain |
+device-loss-mid-decode) on the smoke-sized config so it completes on
+CPU; on a TPU mesh the identical code path serves the full config.  The
+device-loss preset demonstrates the Lemma-1 elastic replan mid-decode —
+in-flight requests restart from their prompts and finish with identical
+token streams.
 """
 
 import argparse
@@ -17,12 +23,13 @@ sys.path.insert(0, "src")
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--scenario", default="steady")
     args = ap.parse_args()
     # the serving loop lives in the launcher; this example drives it the
     # way an operator would
     cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
-           "--smoke", "--requests", "8", "--slots", "4",
-           "--prompt-len", "24", "--gen", "12"]
+           "--smoke", "--scenario", args.scenario,
+           "--requests", "8", "--slots", "3", "--seed", "0"]
     print("$", " ".join(cmd))
     raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src",
                                                **__import__("os").environ}))

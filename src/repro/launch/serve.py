@@ -1,157 +1,123 @@
-"""Batched serving driver: prefill + decode loop with a continuous-batching
-slot manager.
+"""Serving CLI — a thin launcher over the ``repro.serve`` subsystem.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
-      --requests 8 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+      --scenario steady --requests 8 --seed 0
 
-The slot manager packs requests into a fixed device batch; finished
-sequences release their slot to queued requests (the vLLM-style pattern at
-the granularity XLA likes: fixed shapes, slot reuse).
+Replays a seeded traffic scenario (see ``repro.serve.traffic`` presets:
+steady | burst | drain | device-loss-mid-decode) through the
+continuous-batching engine and prints the SLO report.  ``--json PATH``
+dumps the report + per-request records for offline analysis.
+
+The old in-module prototype (whole-batch refill SlotManager + inline
+serve loop) moved to ``repro.serve.scheduler`` — and the refill path was
+fixed on the way: admission now prefills per-slot and merges only that
+slot's cache rows, so an in-flight request's KV state is never clobbered
+by someone else's admission.  ``SlotManager`` / ``Request`` stay
+importable from here as warn-once deprecation shims.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import json
 
 from repro.configs import get_config, smoke_config
-from repro.configs.base import ShapeSpec
-from repro.data import token_stream
-from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_host_mesh
-from repro.models.api import get_model
+
+_DEPRECATED = {
+    "SlotManager": "launch.serve.SlotManager",
+    "Request": "launch.serve.Request",
+}
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    out: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        from repro.deprecation import warn_deprecated
+        from repro.serve import scheduler
 
-
-class SlotManager:
-    """Continuous batching over a fixed-size device batch."""
-
-    def __init__(self, n_slots: int):
-        self.slots: list[Request | None] = [None] * n_slots
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def fill(self) -> list[int]:
-        """Assign queued requests to free slots; returns newly filled."""
-        new = []
-        for i, s in enumerate(self.slots):
-            if s is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
-                new.append(i)
-        return new
-
-    def release_done(self) -> None:
-        for i, s in enumerate(self.slots):
-            if s is not None and s.done:
-                self.finished.append(s)
-                self.slots[i] = None
-
-    @property
-    def active(self) -> bool:
-        return any(self.slots) or bool(self.queue)
+        warn_deprecated(
+            _DEPRECATED[name],
+            f"repro.launch.serve.{name} is deprecated; import it from "
+            f"repro.serve (the promoted serving subsystem)")
+        return getattr(scheduler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def main() -> None:
+    from repro.serve import (
+        JaxModelRunner,
+        SCENARIO_NAMES,
+        ServeAutoscaler,
+        ServingEngine,
+        make_traffic,
+        scenario_preset,
+        snap_prompt_buckets,
+    )
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--scenario", default="steady", choices=SCENARIO_NAMES)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the preset's request count")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="override the preset's arrival rate (req/s)")
+    ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if cfg.family in ("vlm", "encdec"):
-        raise SystemExit("serve.py drives token-LM archs")
-    mesh = make_host_mesh()
-    model = get_model(cfg)
-    max_len = args.prompt_len + args.gen
-    if cfg.family in ("ssm", "hybrid"):
-        # chunked prefill wants seq % chunk == 0
-        args.prompt_len = max(cfg.ssm_chunk,
-                              (args.prompt_len // cfg.ssm_chunk) * cfg.ssm_chunk)
-        max_len = args.prompt_len + args.gen
+    overrides = {}
+    if args.requests is not None:
+        overrides["n_requests"] = args.requests
+    if args.rate is not None:
+        overrides["rate_rps"] = args.rate
+    sc = scenario_preset(args.scenario, **overrides)
+    sc = sc.replace(prompt_buckets=snap_prompt_buckets(cfg, sc.prompt_buckets))
+    trace = make_traffic(sc, args.seed)
 
-    shape = ShapeSpec("serve", args.prompt_len, args.slots, "prefill")
-    with mesh:
-        prefill, p_sh, _, c_sh = steps_lib.build_prefill_step(
-            model, mesh, shape, max_len=max_len)
-        decode, *_ = steps_lib.build_decode_step(
-            model, mesh,
-            ShapeSpec("serve", max_len, args.slots, "decode"))
-        params = jax.device_put(model.init(jax.random.PRNGKey(0)), p_sh)
+    runner = JaxModelRunner(cfg, n_slots=args.slots, max_len=sc.max_len)
+    runner.warmup(sc.prompt_buckets)
+    autoscaler = ServeAutoscaler(runner.n_devices, args.slots)
+    engine = ServingEngine(runner, n_slots=args.slots, autoscaler=autoscaler)
+    result = engine.run(trace, sc)
 
-        # synth requests
-        stream = token_stream(args.requests * args.prompt_len,
-                              cfg.vocab_size, seed=1)
-        mgr = SlotManager(args.slots)
-        for r in range(args.requests):
-            mgr.submit(Request(
-                rid=r,
-                prompt=stream[r * args.prompt_len:(r + 1) * args.prompt_len],
-                max_new=args.gen))
+    slo = result.slo
+    print(f"{cfg.name} · scenario={sc.name} seed={args.seed} "
+          f"slots={args.slots} devices={runner.n_devices}")
+    print(f"  served {slo.n_finished}/{slo.n_submitted} requests "
+          f"({result.n_prefills} prefills, {result.n_decode_steps} decode "
+          f"steps, {slo.n_restarts} restarts, {len(result.replans)} "
+          f"replans) in {slo.makespan_s:.3f}s")
+    print(f"  TTFT p50/p99 {slo.p50_ttft_s * 1e3:.1f}/"
+          f"{slo.p99_ttft_s * 1e3:.1f} ms · TPOT p50/p99 "
+          f"{slo.p50_tpot_s * 1e3:.2f}/{slo.p99_tpot_s * 1e3:.2f} ms · "
+          f"e2e p99 {slo.p99_e2e_s * 1e3:.1f} ms")
+    print(f"  throughput {slo.throughput_tok_s:.1f} tok/s · goodput "
+          f"{slo.goodput_tok_s:.1f} tok/s ({slo.n_slo_ok}/{slo.n_finished} "
+          f"within TTFT<={sc.ttft_slo_s}s, TPOT<={sc.tpot_slo_s}s)")
+    for rp in result.replans:
+        print(f"  replan[{rp.reason}] devices {rp.from_devices}->"
+              f"{rp.to_devices} slots {rp.from_slots}->{rp.to_slots} "
+              f"(Lemma-1 cores {rp.lemma1_cores}, epoch {rp.epoch_s})")
+    for rid in sorted(result.streams)[:3]:
+        print(f"  req {rid}: {result.streams[rid][:8]}...")
 
-        t0 = time.time()
-        n_prefills = n_decodes = 0
-        cache = None
-        last_tokens = np.zeros((args.slots, 1), np.int32)
-        while mgr.active:
-            newly = mgr.fill()
-            if newly:
-                # batch prefill for the whole slot set (fixed shape); slots
-                # without a request run garbage that is never read.
-                prompts = np.stack([
-                    s.prompt if s is not None else
-                    np.zeros(args.prompt_len, np.int32)
-                    for s in mgr.slots])
-                logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
-                n_prefills += 1
-                nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-                for i, s in enumerate(mgr.slots):
-                    if s is not None and not s.out:
-                        s.out.append(int(nxt[i, 0]))
-                last_tokens = nxt
-            logits, cache = decode(params, cache,
-                                   {"tokens": jnp.asarray(last_tokens)})
-            n_decodes += 1
-            nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-            for i, s in enumerate(mgr.slots):
-                if s is None or s.done:
-                    continue
-                s.out.append(int(nxt[i, 0]))
-                if len(s.out) >= s.max_new:
-                    s.done = True
-            last_tokens = nxt
-            mgr.release_done()
-            # simple batch-boundary refill: only refill when all slots idle
-            if not any(s is not None and not s.done for s in mgr.slots):
-                mgr.release_done()
-
-        dt = time.time() - t0
-    total_tokens = sum(len(r.out) for r in mgr.finished)
-    print(f"{cfg.name}: served {len(mgr.finished)} requests, "
-          f"{total_tokens} tokens in {dt:.2f}s "
-          f"({n_prefills} prefills, {n_decodes} decode steps, "
-          f"{total_tokens / max(dt, 1e-9):.1f} tok/s)")
-    for r in mgr.finished[:3]:
-        print(f"  req {r.rid}: {r.out[:8]}...")
+    if args.json:
+        payload = {
+            "arch": cfg.name,
+            "scenario": dataclasses.asdict(sc),
+            "seed": args.seed,
+            "slots": args.slots,
+            "slo": slo.to_row(),
+            "replans": [rp.to_dict() for rp in result.replans],
+            "requests": [dataclasses.asdict(r)
+                         for r in result.metrics.records.values()],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# json report -> {args.json}")
 
 
 if __name__ == "__main__":

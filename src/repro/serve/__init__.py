@@ -1,0 +1,63 @@
+"""repro.serve — load-tested continuous-batching serving (ISSUE 10).
+
+The promoted, fixed descendant of the old ``launch/serve.py`` prototype:
+
+  traffic.py    seeded open-loop traffic (Poisson arrivals, Zipf length
+                buckets, replayable scenario presets).
+  scheduler.py  SlotManager + the continuous-batching ServingEngine
+                (per-slot admission prefill, FIFO fairness,
+                prefill/decode step separation, elastic transitions).
+  runner.py     jitted JAX backend (bucketed batch-1 prefill, per-slot
+                cache merge, fixed-shape batched decode).
+  metrics.py    TTFT/TPOT/e2e percentiles, throughput/goodput SLO report.
+  elastic.py    Lemma-1 autoscaling oracle over runtime.elastic.
+
+See README.md in this package for the API walkthrough and the SLO field
+glossary; ``benchmarks/serving_bench.py`` runs every scenario preset.
+"""
+
+from repro.serve.elastic import ReplanDecision, ServeAutoscaler
+from repro.serve.metrics import RequestRecord, ServeMetrics, SLOReport
+from repro.serve.runner import JaxModelRunner, snap_prompt_buckets
+from repro.serve.scheduler import (
+    EngineResult,
+    ModelRunner,
+    Request,
+    ServingEngine,
+    SlotManager,
+    TickClock,
+    WallClock,
+)
+from repro.serve.traffic import (
+    RequestEvent,
+    Scenario,
+    SCENARIO_NAMES,
+    TrafficTrace,
+    make_traffic,
+    prompt_tokens,
+    scenario_preset,
+)
+
+__all__ = [
+    "ReplanDecision",
+    "ServeAutoscaler",
+    "RequestRecord",
+    "ServeMetrics",
+    "SLOReport",
+    "JaxModelRunner",
+    "snap_prompt_buckets",
+    "EngineResult",
+    "ModelRunner",
+    "Request",
+    "ServingEngine",
+    "SlotManager",
+    "TickClock",
+    "WallClock",
+    "RequestEvent",
+    "Scenario",
+    "SCENARIO_NAMES",
+    "TrafficTrace",
+    "make_traffic",
+    "prompt_tokens",
+    "scenario_preset",
+]

@@ -1,0 +1,172 @@
+"""Jitted model backend for the serving engine.
+
+Shapes are static everywhere XLA cares:
+
+  * decode runs at a fixed ``(n_slots, 1)`` batch against a fixed
+    ``max_len``-deep cache (``launch.steps.build_decode_step``, cache
+    donated — in-place update at scale);
+  * prefill runs batch-1 at the request's *length bucket* — one compiled
+    step per distinct prompt length (lengths come from the traffic
+    generator's small bucket list), so admission never recompiles in
+    steady state;
+  * admission merges the batch-1 prefill cache into the batch cache at
+    the target slot index only.  The merge walks ``model.cache_axes()``
+    and updates each leaf along its ``cache_batch`` axis with
+    ``dynamic_update_slice_in_dim`` — one donated jitted call, generic
+    across families (dense KV, SSM state, hybrid), and by construction
+    unable to touch any other slot's rows.  This is the fix for the old
+    ``launch/serve.py`` whole-batch-refill bug.
+
+Per-slot ``len`` rows make in-flight sequences independent: each slot
+decodes at its own depth, and a freshly admitted slot starts at its
+prompt length without disturbing neighbours.  Greedy argmax decode is
+row-wise deterministic, so a request's stream is a pure function of its
+prompt — the property the refill and device-loss tests pin.
+
+``rebuild`` re-places the (host-canonical) params onto a new device
+mesh and/or slot count — the elastic path.  Cache state is discarded;
+the engine restarts in-flight requests from their prompts (identical
+streams, see scheduler docs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch import steps as steps_lib
+from repro.models.api import Model, get_model
+
+__all__ = ["JaxModelRunner", "snap_prompt_buckets"]
+
+
+def snap_prompt_buckets(cfg: ModelConfig,
+                        buckets: tuple[int, ...]) -> tuple[int, ...]:
+    """SSM/hybrid chunked prefill wants seq % ssm_chunk == 0: round each
+    bucket up to the chunk.  Other families pass through (deduped,
+    sorted)."""
+    if cfg.family in ("ssm", "hybrid") and cfg.ssm_chunk > 1:
+        c = cfg.ssm_chunk
+        buckets = tuple(-(-b // c) * c for b in buckets)
+    return tuple(sorted(set(buckets)))
+
+
+def _make_cache_merge(model: Model):
+    """One donated jitted merge: write a batch-1 cache into the batch
+    cache at ``slot`` along each leaf's ``cache_batch`` axis."""
+    axes = model.cache_axes()
+
+    def merge(full, one, slot):
+        leaves, treedef = jax.tree_util.tree_flatten(full)
+        ones = treedef.flatten_up_to(one)
+        axs = treedef.flatten_up_to(axes)
+        out = []
+        for f, o, ax in zip(leaves, ones, axs):
+            i = list(ax).index("cache_batch")
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=i))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return jax.jit(merge, donate_argnums=(0,))
+
+
+class JaxModelRunner:
+    """ModelRunner over the jitted prefill/decode step builders."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 devices=None, seed: int = 0):
+        if cfg.family in ("vlm", "encdec"):
+            raise ValueError("the serving runner drives token-LM archs "
+                             f"(got family {cfg.family!r})")
+        self.cfg = cfg
+        self.vocab = cfg.vocab_size
+        self.max_len = max_len
+        self.model = get_model(cfg)
+        self._host_params = self.model.init(jax.random.PRNGKey(seed))
+        self._all_devices = (list(devices) if devices is not None
+                             else list(jax.devices()))
+        self._build(self._all_devices, n_slots)
+
+    # -- construction / elastic rebuild -------------------------------------
+
+    def _build(self, devices, n_slots: int) -> None:
+        self.devices = list(devices)
+        self.n_devices = len(self.devices)
+        self.n_slots = n_slots
+        self.mesh = Mesh(np.asarray(self.devices), ("data",))
+        decode, p_sh, _, c_sh = steps_lib.build_decode_step(
+            self.model, self.mesh,
+            ShapeSpec("serve_decode", self.max_len, n_slots, "decode"))
+        self._decode_step = decode
+        self.params = jax.device_put(self._host_params, p_sh)
+        self.cache = jax.device_put(
+            self.model.init_cache(n_slots, self.max_len), c_sh)
+        self._prefill_steps: dict[int, object] = {}
+        self._merge = _make_cache_merge(self.model)
+
+    def rebuild(self, n_devices: int | None = None,
+                n_slots: int | None = None) -> None:
+        """Elastic transition: survivors are the first ``n_devices`` of
+        the original device list (the CPU-ring convention the fault tests
+        use); params are re-placed from the host-canonical copy, all
+        compiled steps and cache state are rebuilt."""
+        devices = (self._all_devices[:n_devices] if n_devices is not None
+                   else self.devices)
+        if not devices:
+            raise ValueError("rebuild needs at least one device")
+        self._build(devices, n_slots if n_slots is not None else self.n_slots)
+
+    # -- serving steps -------------------------------------------------------
+
+    def _prefill_for(self, length: int):
+        fn = self._prefill_steps.get(length)
+        if fn is None:
+            fn, *_ = steps_lib.build_prefill_step(
+                self.model, self.mesh,
+                ShapeSpec("serve_prefill", length, 1, "prefill"),
+                max_len=self.max_len)
+            self._prefill_steps[length] = fn
+        return fn
+
+    def prefill(self, slot: int, prompt: np.ndarray) -> int:
+        if not 0 <= slot < self.n_slots:
+            raise IndexError(f"slot {slot} out of range [0, {self.n_slots})")
+        if len(prompt) + 1 > self.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot decode into a "
+                f"max_len={self.max_len} cache")
+        fn = self._prefill_for(len(prompt))
+        logits, one_cache = fn(
+            self.params,
+            {"tokens": jnp.asarray(np.asarray(prompt, np.int32)[None, :])})
+        self.cache = self._merge(self.cache, one_cache, jnp.int32(slot))
+        return int(np.asarray(jnp.argmax(logits[0, -1])))
+
+    def decode(self, last_tokens: np.ndarray) -> np.ndarray:
+        logits, self.cache = self._decode_step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(np.asarray(last_tokens,
+                                              np.int32)[:, None])})
+        return np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                          dtype=np.int32)
+
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self, prompt_buckets: tuple[int, ...]) -> None:
+        """Compile every prefill bucket + the decode step up front so
+        measured latencies are serving work, not XLA compiles (real
+        serving stacks warm exactly this way).  Cache state is reset
+        afterwards."""
+        for b in prompt_buckets:
+            fn = self._prefill_for(b)
+            fn(self.params, {"tokens": jnp.zeros((1, b), jnp.int32)})
+        _, warmed = self._decode_step(
+            self.params, self.cache,
+            {"tokens": jnp.zeros((self.n_slots, 1), jnp.int32)})
+        # decode donated the cache buffers; restore a clean zero cache
+        self.cache = jax.device_put(
+            self.model.init_cache(self.n_slots, self.max_len),
+            jax.tree.map(lambda x: x.sharding, warmed))

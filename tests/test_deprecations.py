@@ -54,6 +54,26 @@ def test_shim_warns_exactly_once(call, key, prog, mesh):
             if issubclass(w.category, DeprecationWarning)] == []
 
 
+def test_launch_serve_shim_warns_once():
+    """repro.launch.serve.SlotManager moved to repro.serve.scheduler; the
+    old attribute is a PEP 562 warn-once shim resolving to the same class
+    (ISSUE 10: the prototype was promoted to the serve subsystem)."""
+    import repro.launch.serve as launch_serve
+    from repro.serve.scheduler import SlotManager
+
+    deprecation.reset("launch.serve.SlotManager")
+    with pytest.warns(DeprecationWarning, match="repro.serve"):
+        cls = launch_serve.SlotManager  # lint: allow-deprecated
+    assert cls is SlotManager
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cls = launch_serve.SlotManager  # lint: allow-deprecated
+    assert [w for w in caught
+            if issubclass(w.category, DeprecationWarning)] == []
+    with pytest.raises(AttributeError):
+        launch_serve.NoSuchThing
+
+
 def test_warn_once_per_key_and_reset():
     deprecation.reset()
     with pytest.warns(DeprecationWarning, match="gone soon"):

@@ -1,0 +1,113 @@
+"""Lemma-1 elastic autoscaling for serving (ISSUE 10 tentpole pin).
+
+Unit level: ``ServeAutoscaler`` prices every transition with the real
+``runtime.elastic.ElasticPlanner`` (Lemma-1 plan + period-program compile
++ static validation on the survivors), shrinks the decode batch by the
+replanned epoch-throughput ratio on device loss, and grows it toward
+capacity on sustained SLO violations.
+
+End to end (the acceptance scenario): the seeded device-loss-mid-decode
+preset on the real smoke model completes with a replan and restarts, and
+every request's token stream is bit-identical to a no-fault run of the
+same trace — greedy decode is a pure function of the prompt, so elastic
+transitions cost latency, never tokens (the serving analogue of
+tests/test_fault_recovery.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serve.elastic import ReplanDecision, ServeAutoscaler
+from repro.serve.runner import JaxModelRunner
+from repro.serve.scheduler import ServingEngine, TickClock
+from repro.serve.traffic import make_traffic, scenario_preset
+
+N_DEV = 8
+
+
+@pytest.fixture(scope="module")
+def auto():
+    return ServeAutoscaler(N_DEV, n_slots=4)
+
+
+def test_device_loss_reprices_with_lemma1_and_shrinks_slots(auto):
+    base_epoch = auto._base_epoch_s
+    d = auto.on_device_loss(2, now=1.5)
+    assert isinstance(d, ReplanDecision) and d.reason == "device_loss"
+    assert (d.from_devices, d.to_devices) == (8, 6)
+    assert d.at_s == 1.5
+    # Lemma-1 allocation on the survivors: one entry per pipeline stage,
+    # each within the 6-core ring
+    assert d.lemma1_cores and all(1 <= c <= 6 for c in d.lemma1_cores)
+    # fewer cores => slower epoch => fewer admitted slots
+    assert d.epoch_s > base_epoch
+    assert d.to_slots <= d.from_slots
+    assert d.to_slots == max(1, round(4 * base_epoch / d.epoch_s))
+    assert auto.n_devices == 6 and auto.n_slots == d.to_slots
+    assert auto.events[-1] is d
+
+
+def test_slo_violation_grows_toward_capacity_then_saturates(auto):
+    start = auto.n_slots
+    d = auto.on_slo_violation(now=2.0, p99_ttft_s=1.0)
+    assert d is not None and d.reason == "slo_violation"
+    assert d.to_slots == min(auto.max_slots, start + max(1, start // 2))
+    assert d.lemma1_cores is not None     # re-derived for current membership
+    while (d := auto.on_slo_violation(3.0, 1.0)) is not None:
+        assert d.to_slots <= auto.max_slots
+    assert auto.n_slots == auto.max_slots  # saturated: further calls refuse
+    assert auto.on_slo_violation(4.0, 1.0) is None
+
+
+def test_slot_floor_survives_heavy_loss():
+    a = ServeAutoscaler(N_DEV, n_slots=2, min_slots=1)
+    d = a.on_device_loss(N_DEV - 1, now=0.0)   # down to a single core
+    assert d.to_devices == 1
+    assert d.to_slots >= 1
+    assert d.to_dict()["lemma1_cores"] == list(d.lemma1_cores)
+
+
+def test_device_loss_mid_decode_streams_match_no_fault_run():
+    cfg = smoke_config("qwen3-14b")
+    sc = scenario_preset("device-loss-mid-decode", n_requests=6,
+                         prompt_buckets=(8,), gen_buckets=(4, 8),
+                         device_loss=(2, 2))
+    trace = make_traffic(sc, seed=0)
+
+    def serve(run_sc):
+        runner = JaxModelRunner(cfg, n_slots=3, max_len=sc.max_len)
+        auto = ServeAutoscaler(runner.n_devices, 3)
+        engine = ServingEngine(runner, n_slots=3, clock=TickClock(0.01),
+                               autoscaler=auto)
+        return engine.run(trace, run_sc), runner
+
+    faulted, runner = serve(sc)
+    clean, _ = serve(sc.replace(device_loss=None))
+
+    # the fault really happened and forced restarts + a rebuild
+    assert [r.reason for r in faulted.replans] == ["device_loss"]
+    assert faulted.replans[0].to_devices == 6
+    assert runner.n_devices == 6
+    assert faulted.slo.n_restarts >= 1
+
+    # ...and cost zero tokens: every stream matches the no-fault run
+    assert not clean.replans and clean.slo.n_restarts == 0
+    assert set(faulted.streams) == set(trace.rids)
+    assert faulted.streams == clean.streams
+    for ev in trace.events:
+        assert len(faulted.streams[ev.rid]) == ev.gen_len
+
+
+def test_rebuild_repartitions_params_on_survivors():
+    cfg = smoke_config("qwen3-14b")
+    runner = JaxModelRunner(cfg, n_slots=2, max_len=16)
+    assert runner.n_devices == N_DEV
+    prompt = np.arange(8, dtype=np.int32) % cfg.vocab_size
+    first_before = runner.prefill(0, prompt)
+    runner.rebuild(n_devices=6, n_slots=3)
+    assert runner.n_devices == 6 and runner.n_slots == 3
+    # params re-placed from the host-canonical copy: same math
+    assert runner.prefill(0, prompt) == first_before
+    with pytest.raises(ValueError, match="at least one device"):
+        runner.rebuild(n_devices=0)

@@ -1,0 +1,113 @@
+"""Traffic-generator determinism (ISSUE 10 satellite): a trace is a pure
+function of (scenario, seed) — bit-identical across runs and independent
+of everything downstream (slots, devices, model) — and prompt content is
+a pure function of (trace seed, rid, vocab)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serve.traffic import (
+    RequestEvent,
+    SCENARIO_NAMES,
+    Scenario,
+    make_traffic,
+    prompt_tokens,
+    scenario_preset,
+)
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_same_seed_is_bit_identical(name):
+    sc = scenario_preset(name)
+    a = make_traffic(sc, seed=7)
+    b = make_traffic(sc, seed=7)
+    assert a.events == b.events           # frozen dataclasses: field equality
+    assert a.seed == b.seed and a.scenario == b.scenario == name
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_different_seeds_diverge(name):
+    sc = scenario_preset(name)
+    a = make_traffic(sc, seed=0)
+    b = make_traffic(sc, seed=1)
+    assert a.events != b.events
+
+
+def test_equal_parameter_scenarios_get_distinct_traces():
+    # the RNG folds in crc32(name): same fields, different name => new trace
+    a = Scenario("alpha", n_requests=8)
+    b = Scenario("bravo", n_requests=8)
+    ta, tb = make_traffic(a, 0), make_traffic(b, 0)
+    assert [e.arrival_s for e in ta.events] != [e.arrival_s for e in tb.events]
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_event_shape_invariants(name):
+    sc = scenario_preset(name)
+    trace = make_traffic(sc, seed=3)
+    assert len(trace) == sc.n_requests
+    assert trace.rids == tuple(range(sc.n_requests))
+    arrivals = [e.arrival_s for e in trace.events]
+    assert arrivals == sorted(arrivals)
+    assert all(t > 0 for t in arrivals)
+    for e in trace.events:
+        assert e.prompt_len in sc.prompt_buckets
+        assert e.gen_len in sc.gen_buckets
+        assert e.prompt_len + e.gen_len <= sc.max_len
+
+
+def test_burst_window_densifies_arrivals():
+    # 10x multiplier inside [0.2, 0.5): that window must hold more
+    # arrivals than the equally long plain-rate window after it
+    sc = scenario_preset("burst", n_requests=300)
+    trace = make_traffic(sc, seed=0)
+    t0, t1, _ = sc.burst
+    inside = sum(t0 <= e.arrival_s < t1 for e in trace.events)
+    after = sum(t1 <= e.arrival_s < t1 + (t1 - t0) for e in trace.events)
+    assert inside > 2 * max(after, 1)
+
+
+def test_zipf_rank1_bucket_dominates():
+    sc = scenario_preset("steady", n_requests=400)
+    trace = make_traffic(sc, seed=5)
+    counts = {b: 0 for b in sc.prompt_buckets}
+    for e in trace.events:
+        counts[e.prompt_len] += 1
+    first, *rest = sc.prompt_buckets
+    assert all(counts[first] > counts[b] for b in rest)
+
+
+def test_prompt_tokens_pure_function_of_seed_rid_vocab():
+    ev = RequestEvent(rid=4, arrival_s=0.1, prompt_len=16, gen_len=4)
+    a = prompt_tokens(11, ev, vocab=256)
+    b = prompt_tokens(11, ev, vocab=256)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (16,) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < 256
+    # rid and seed both matter
+    other = dataclasses.replace(ev, rid=5)
+    assert not np.array_equal(a, prompt_tokens(11, other, vocab=256))
+    assert not np.array_equal(a, prompt_tokens(12, ev, vocab=256))
+
+
+def test_preset_overrides_and_validation():
+    sc = scenario_preset("steady", n_requests=3, prompt_buckets=(8,))
+    assert sc.n_requests == 3 and sc.prompt_buckets == (8,)
+    assert scenario_preset("steady") is scenario_preset("steady")
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenario_preset("nope")
+    with pytest.raises(ValueError):
+        Scenario("bad", n_requests=0)
+    with pytest.raises(ValueError):
+        Scenario("bad", rate_rps=0.0)
+    with pytest.raises(ValueError):
+        Scenario("bad", gen_buckets=(4, 0))
+
+
+def test_trace_serialization_round_trip():
+    trace = make_traffic(scenario_preset("drain"), seed=2)
+    dicts = trace.to_dicts()
+    assert [RequestEvent(**d) for d in dicts] == list(trace.events)
+    assert trace.duration_s == trace.events[-1].arrival_s

@@ -5,8 +5,10 @@ Three rules, all pure-stdlib ``ast`` (no third-party linter needed):
 
   deprecated-call     No calls to the deprecated execution-engine shims
                       (``repro.exec.runtime.build_train_step``, its
-                      ``repro.exec`` re-export, and
-                      ``repro.launch.steps.build_fcnn_program_step``)
+                      ``repro.exec`` re-export,
+                      ``repro.launch.steps.build_fcnn_program_step``, and
+                      the ``repro.launch.serve`` SlotManager/Request
+                      shims — promoted to ``repro.serve``)
                       outside their own defining modules.  Aliased
                       imports are resolved (``import repro.exec as rexec;
                       rexec.build_train_step(...)`` is caught).  The
@@ -51,12 +53,15 @@ DEPRECATED_CALLS = {
     "repro.exec.runtime.build_train_step",
     "repro.exec.build_train_step",
     "repro.launch.steps.build_fcnn_program_step",
+    "repro.launch.serve.SlotManager",
+    "repro.launch.serve.Request",
 }
 # the shims' own modules (and the package façade re-exporting them)
 DEPRECATED_HOMES = {
     os.path.join("src", "repro", "exec", "runtime.py"),
     os.path.join("src", "repro", "exec", "__init__.py"),
     os.path.join("src", "repro", "launch", "steps.py"),
+    os.path.join("src", "repro", "launch", "serve.py"),
 }
 
 JIT_WRAPPERS = {"jax.jit", "jit", "jax.pmap", "pmap"}
